@@ -1,0 +1,50 @@
+"""Paper Figs. 3 & 8: per-phase time breakdowns.
+
+Fig. 3: TP vs HP breakdown (matmul / other / comm / idle) at 8 and 16 GPUs
+for the 70B model on both workloads.
+Fig. 8: NVRAR vs NCCL breakdown for decode-heavy TP on 16 GPUs.
+"""
+from __future__ import annotations
+
+from .common import emit
+
+
+def run():
+    from repro.inference.simulator import simulate_batch_latency, A100
+    from repro.core.comm_model import PERLMUTTER
+    from repro.configs.llama3_paper import LLAMA31_70B as M70
+
+    for wl, (pl, dl) in (("prefill_heavy", (2363, 128)),
+                         ("decode_heavy", (1426, 3072))):
+        for n in (8, 16):
+            for scheme in ("tp", "hp"):
+                t, bd = simulate_batch_latency(
+                    M70, A100, PERLMUTTER, n, scheme=scheme,
+                    ar_algo="nccl", prompt_len=pl, decode_len=dl,
+                    n_prompts=8)
+                emit(f"fig3/{wl}/{scheme}{n}", t * 1e6,
+                     f"matmul={bd.matmul:.2f};other={bd.other:.2f};"
+                     f"comm={bd.comm:.2f};idle={bd.idle:.2f}")
+
+    for npr in (8, 32):
+        for algo in ("nccl", "nvrar"):
+            t, bd = simulate_batch_latency(
+                M70, A100, PERLMUTTER, 16, scheme="tp", ar_algo=algo,
+                prompt_len=1426, decode_len=3072, n_prompts=npr)
+            emit(f"fig8/decode_heavy/P{npr}/{algo}", t * 1e6,
+                 f"matmul={bd.matmul:.2f};other={bd.other:.2f};"
+                 f"comm={bd.comm:.2f}")
+
+    # straggler sensitivity (StragglAR-adjacent; ring pays per-hop)
+    for delay_us in (0, 5, 20):
+        for algo in ("ring", "nvrar"):
+            t, bd = simulate_batch_latency(
+                M70, A100, PERLMUTTER, 16, scheme="tp", ar_algo=algo,
+                prompt_len=1426, decode_len=3072, n_prompts=8,
+                straggler_delay=delay_us * 1e-6)
+            emit(f"straggler/{algo}/delay{delay_us}us", t * 1e6,
+                 f"comm_s={bd.comm:.2f}")
+
+
+if __name__ == "__main__":
+    run()

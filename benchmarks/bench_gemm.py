@@ -1,0 +1,65 @@
+"""Paper Table 4: Prefill-GEMM vs Decode-GEMM under M-halving (HP) and
+K-halving (TP).
+
+Two channels: (1) real CPU matmul timings at 1/8-scaled shapes (the tile
+effect is hardware-universal: BLAS kernels also stop scaling below their M
+tile); (2) the simulator's tile-floor model at the paper's exact shapes for
+A100 and for the v5e target.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def measured_cpu(scale: int = 16):
+    import jax
+    import jax.numpy as jnp
+    shapes = {
+        "prefill_gemm": (32768 // scale, 8192 // scale, 57344 // scale),
+        "decode_gemm": (32, 8192 // scale, 57344 // scale),
+    }
+    f = jax.jit(lambda a, b: a @ b)
+    for name, (m, n, k) in shapes.items():
+        rng = np.random.default_rng(0)
+        for variant, (mm, kk) in (("baseline", (m, k)), ("HP_M/2", (m // 2, k)),
+                                  ("TP_K/2", (m, k // 2))):
+            mm = max(mm, 1)
+            a = jnp.asarray(rng.standard_normal((mm, kk)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((kk, n)), jnp.float32)
+            us = timeit(lambda a=a, b=b: jax.block_until_ready(f(a, b)),
+                        warmup=1, iters=2)
+            emit(f"table4/cpu/{name}/{variant}", us,
+                 f"M={mm};N={n};K={kk}")
+
+
+def modeled(chip_name: str):
+    from repro.inference.simulator import A100, V5E
+    chip = {"a100": A100, "v5e": V5E}[chip_name]
+    eff = chip.flops_bf16 * chip.efficiency
+    for name, (m, n, k) in {
+        "prefill_gemm": (32768, 8192, 57344),
+        "decode_gemm": (32, 8192, 57344),
+    }.items():
+        base = None
+        for variant, (mm, kk) in (("baseline", (m, k)), ("HP_M/2", (m // 2, k)),
+                                  ("TP_K/2", (m, k // 2))):
+            m_eff = max(mm, chip.gemm_tile_m)
+            flops = 2.0 * m_eff * n * kk
+            bytes_ = 2.0 * (mm * kk + kk * n + mm * n)
+            t = max(flops / eff, bytes_ / chip.hbm_bw)
+            if base is None:
+                base = t
+            emit(f"table4/model_{chip_name}/{name}/{variant}", t * 1e6,
+                 f"speedup_vs_base={base/t:.2f}x")
+
+
+def run():
+    measured_cpu()
+    modeled("a100")
+    modeled("v5e")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Figs. 1/2 (+ Fig. 11): strong scaling of TP vs HP for Llama-3.1
+70B/405B across prefill-heavy and decode-heavy batched workloads, via the
+event-driven simulator with the paper's Perlmutter constants."""
+from __future__ import annotations
+
+from .common import emit
+
+WORKLOADS = {
+    "prefill_heavy": (2363, 128),
+    "decode_heavy": (1426, 3072),
+}
+
+
+def run():
+    from repro.inference.simulator import simulate_batch_latency, A100
+    from repro.core.comm_model import PERLMUTTER
+    from repro.configs.llama3_paper import LLAMA31_70B, LLAMA31_405B
+
+    for model, gpus in ((LLAMA31_70B, (4, 8, 16, 32)),
+                        (LLAMA31_405B, (16, 32, 64, 128))):
+        for wl, (pl, dl) in WORKLOADS.items():
+            for npr in (8, 32):
+                for n in gpus:
+                    for scheme in ("tp", "hp"):
+                        t, bd = simulate_batch_latency(
+                            model, A100, PERLMUTTER, n, scheme=scheme,
+                            ar_algo="nccl", prompt_len=pl, decode_len=dl,
+                            n_prompts=npr)
+                        emit(f"fig1-2/{model.name}/{wl}/P{npr}/"
+                             f"{scheme}{n}", t * 1e6,
+                             f"matmul_s={bd.matmul:.2f};"
+                             f"comm_s={bd.comm:.2f};idle_s={bd.idle:.2f}")
+
+
+if __name__ == "__main__":
+    run()

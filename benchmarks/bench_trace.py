@@ -1,0 +1,74 @@
+"""Paper Figs. 9 & 18: trace-based serving throughput (BurstGPT-like and
+decode-heavy traces) for NCCL-TP vs NVRAR-TP vs HP under two concurrency
+caps, via the event-driven serving simulator; plus a REAL continuous-batching
+replay on the tiny engine (scheduler correctness: no dropped requests)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+
+
+def simulated():
+    from repro.inference.simulator import simulate_trace, A100
+    from repro.core.comm_model import PERLMUTTER
+    from repro.configs.llama3_paper import LLAMA31_70B as M70
+
+    rng = np.random.default_rng(0)
+    n = 1000
+
+    def lengths(mean_in, mean_out):
+        li = np.maximum(2, rng.lognormal(np.log(mean_in), 0.6, n)).astype(int)
+        lo = np.maximum(1, rng.lognormal(np.log(mean_out), 0.6, n)).astype(int)
+        return li, lo
+
+    # BurstGPT-like (Fig. 9) and decode-heavy (Fig. 18) traces
+    for trace, (mi, mo) in (("burstgpt", (600, 250)),
+                            ("decode_heavy", (1024, 4096))):
+        li, lo = lengths(mi, mo)
+        shape = 1.0 / 2.0  # burstiness 2.0 (gamma)
+        arr = np.cumsum(rng.gamma(shape, scale=1.0 / (10.0 * shape), size=n))
+        for conc in (32, 256):
+            results = {}
+            for label, scheme, algo in (("nccl_tp", "tp", "nccl"),
+                                        ("nvrar_tp", "tp", "nvrar"),
+                                        ("hp", "hp", "nccl")):
+                out = simulate_trace(M70, A100, PERLMUTTER, 16,
+                                     scheme=scheme, ar_algo=algo,
+                                     arrivals=arr, in_lens=li, out_lens=lo,
+                                     concurrency=conc)
+                results[label] = out["throughput_tok_s"]
+                emit(f"fig9-18/{trace}/C{conc}/{label}",
+                     out["makespan_s"] * 1e6,
+                     f"throughput_tok_s={out['throughput_tok_s']:.1f}")
+            emit(f"fig9-18/{trace}/C{conc}/nvrar_vs_nccl_speedup",
+                 results["nvrar_tp"] / max(results["nccl_tp"], 1e-9),
+                 f"vs_hp={results['nvrar_tp']/max(results['hp'],1e-9):.2f}x")
+
+
+def real_scheduler():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models.transformer import make_plan, init_params
+    from repro.inference.scheduler import ContinuousBatcher, make_trace
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), ap)
+    sched = ContinuousBatcher(ap, params, slots=4, s_max=96)
+    reqs = make_trace(10, mean_in=12, mean_out=8, rate=3.0,
+                      vocab=cfg.vocab_size, seed=1)
+    done = sched.run(reqs)
+    completed = sum(r.output is not None for r in done)
+    total = sum(len(r.output) for r in done if r.output is not None)
+    emit("fig9/real_scheduler_completed", completed,
+         f"requests=10;tokens={total}")
+    assert completed == 10
+
+
+def run():
+    simulated()
+    real_scheduler()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Summarize the roofline sweep JSONs (written by repro.launch.roofline)
+into harness CSV rows + the EXPERIMENTS.md table body."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def load(roofline_dir: str = "experiments/roofline"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(roofline_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return [r for r in recs if r.get("status") == "ok"]
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline/none", 0.0,
+             "run 'python -m repro.launch.roofline --all' first")
+        return
+    for r in recs:
+        name = (f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+                + ("/xpod" if r.get("cross_pod_tp") else "")
+                + (f"/{r['strategy']}" if r.get("strategy", "flat") != "flat"
+                   else ""))
+        emit(name, r["bound_step_s"] * 1e6,
+             f"dom={r['dominant']};frac={r['dominant_frac']:.2f};"
+             f"compute_ms={r['compute_s']*1e3:.2f};"
+             f"memory_ms={r['memory_s']*1e3:.2f};"
+             f"coll_ms={r['collective_s']*1e3:.2f};"
+             f"useful={r['useful_flops_ratio']:.2f}")
+
+
+def markdown_table(roofline_dir: str = "experiments/roofline",
+                   include_variants: bool = False) -> str:
+    recs = load(roofline_dir)
+    if not include_variants:
+        recs = [r for r in recs if not r.get("variant")]
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | MODEL/HLO flops | step bound (s) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    seen = set()
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"],
+                                         x.get("strategy", ""),
+                                         x.get("variant", ""))):
+        tag = r["mesh"] + (" xpod" if r.get("cross_pod_tp") else "") + \
+            (f" {r['strategy']}" if r.get("strategy", "flat") != "flat"
+             else "") + \
+            (f" [{r['variant']}]" if r.get("variant") else "")
+        key = (r["arch"], r["shape"], tag)
+        if key in seen:
+            continue
+        seen.add(key)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {tag} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['bound_step_s']:.3e} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()
+    print(markdown_table())

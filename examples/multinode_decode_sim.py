@@ -1,0 +1,35 @@
+"""Reproduce the paper's headline result end-to-end: multi-node decode-heavy
+TP inference, NCCL vs NVRAR, for Llama-3.1 70B and 405B on the Perlmutter
+model — plus the TPU multi-pod projection.
+
+    PYTHONPATH=src python examples/multinode_decode_sim.py
+"""
+from repro.inference.simulator import simulate_batch_latency, A100, V5E
+from repro.core.comm_model import PERLMUTTER, TPU_V5E
+from repro.configs.llama3_paper import LLAMA31_70B, LLAMA31_405B
+
+
+def sweep(model, chip, net, gpus, label):
+    print(f"\n{label} — decode-heavy (1426 prompt / 3072 decode), #P=32")
+    print(f"{'chips':>6} {'TP+NCCL':>10} {'TP+NVRAR':>10} {'speedup':>8}")
+    for n in gpus:
+        t_n, _ = simulate_batch_latency(model, chip, net, n, scheme="tp",
+                                        ar_algo="nccl", prompt_len=1426,
+                                        decode_len=3072, n_prompts=32)
+        t_v, _ = simulate_batch_latency(model, chip, net, n, scheme="tp",
+                                        ar_algo="nvrar", prompt_len=1426,
+                                        decode_len=3072, n_prompts=32)
+        print(f"{n:6d} {t_n:9.1f}s {t_v:9.1f}s {t_n/t_v:7.2f}x")
+
+
+def main():
+    sweep(LLAMA31_70B, A100, PERLMUTTER, (8, 16, 32),
+          "Llama-3.1-70B on Perlmutter (paper Fig. 7 left)")
+    sweep(LLAMA31_405B, A100, PERLMUTTER, (16, 32, 64, 128),
+          "Llama-3.1-405B on Perlmutter (paper Fig. 7 middle)")
+    sweep(LLAMA31_405B, V5E, TPU_V5E, (512, 1024),
+          "Llama-3.1-405B on TPU v5e multi-pod (this repo's target)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Assigned architectures (exact public configs) + reduced smoke variants."""
+from .registry import (ARCH_IDS, get_config, get_smoke, SHAPES, Shape,
+                       shape_applicable, cell_plan, CellPlan, all_cells)
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "SHAPES", "Shape",
+           "shape_applicable", "cell_plan", "CellPlan", "all_cells"]

@@ -1,0 +1,129 @@
+"""Architecture registry + assigned input shapes + per-cell execution plans.
+
+``--arch <id>`` resolution for every launcher/benchmark entry point, the
+4-shape grid from the assignment, applicability rules (which cells are
+skipped and why — mirrored in DESIGN.md §Arch-applicability), and the
+execution plan for each (arch x shape x mesh) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from ..models.common import ModelConfig
+
+_MODULES = {
+    "hymba-1.5b": "hymba_1_5b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-7b": "rwkv6_7b",
+    "pixtral-12b": "pixtral_12b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "mistral-large-123b": "mistral_large_123b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "llama3.2-1b": "llama3_2_1b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned): seq_len x global_batch; decode/long lower serve_step.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+# archs with a sub-quadratic long-context path (SSM state / sliding window)
+_SUBQUADRATIC = ("rwkv6-7b", "hymba-1.5b")
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in _SUBQUADRATIC:
+        return False, ("pure full-attention arch: 500k dense-KV decode is "
+                       "not the sub-quadratic regime this cell requires "
+                       "(skip noted in DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Per-cell execution plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    arch: str
+    shape: Shape
+    microbatches: int = 1          # train grad-accum steps
+    fsdp_serve: bool = False       # weight-gather serving (big models)
+    batch_replicated: bool = False  # long_500k: batch=1 cannot DP-shard
+    notes: str = ""
+
+
+# Models whose bf16 weights exceed a single v5e chip budget under 16-way TP
+# (params/16 > ~8 GB) serve with FSDP weight-gathering.
+_BIG_SERVE = ("mistral-large-123b", "dbrx-132b", "qwen1.5-32b")
+
+_TRAIN_MB = {  # grad-accum microbatch counts (per-device batch is gb/|dp|)
+    "mistral-large-123b": 8, "dbrx-132b": 8, "qwen1.5-32b": 8,
+    "pixtral-12b": 4, "rwkv6-7b": 4, "codeqwen1.5-7b": 4,
+    "qwen3-moe-30b-a3b": 4, "whisper-medium": 2, "hymba-1.5b": 2,
+    "llama3.2-1b": 2,
+}
+
+
+def cell_plan(arch: str, shape_name: str) -> CellPlan:
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    if shape.kind == "train":
+        return CellPlan(arch, shape, microbatches=_TRAIN_MB[arch])
+    if shape_name == "long_500k":
+        return CellPlan(arch, shape, batch_replicated=True,
+                        notes="batch=1: dp axes idle (replicated)")
+    return CellPlan(arch, shape, fsdp_serve=arch in _BIG_SERVE)
+
+
+def all_cells() -> List[Tuple[str, str, bool, str]]:
+    """[(arch, shape, applicable, skip_reason)] for the full 40-cell grid."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            ok, why = shape_applicable(a, s)
+            out.append((a, s, ok, why))
+    return out
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "SHAPES", "Shape",
+           "shape_applicable", "cell_plan", "CellPlan", "all_cells"]

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — hierarchical all-reduce for multi-node
+(multi-pod) LLM inference/training, plus its alpha-beta performance models."""
+from .pcontext import ParallelCtx, LOCAL, single_pod_ctx, multi_pod_ctx
+from .hierarchical import (
+    rd_all_reduce, rd_halving_all_reduce, compressed_rd_all_reduce,
+    tp_all_reduce, tp_reduce_scatter, tp_all_gather,
+    grad_cross_pod_reduce, dp_psum_mean, axes_size,
+)
+from . import comm_model
+
+__all__ = [
+    "ParallelCtx", "LOCAL", "single_pod_ctx", "multi_pod_ctx",
+    "rd_all_reduce", "rd_halving_all_reduce", "compressed_rd_all_reduce",
+    "tp_all_reduce", "tp_reduce_scatter", "tp_all_gather",
+    "grad_cross_pod_reduce", "dp_psum_mean", "axes_size", "comm_model",
+]

@@ -1,0 +1,11 @@
+"""Inference runtime: batched engine, continuous-batching scheduler, trace
+replay, and the event-driven cluster simulator used for the paper's
+strong-scaling and serving studies."""
+from .engine import InferenceEngine, GenerationResult
+from .scheduler import ContinuousBatcher, Request
+from .simulator import (ChipSpec, A100, GH200, V5E, ClusterSim,
+                        simulate_batch_latency, simulate_trace)
+
+__all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
+           "Request", "ChipSpec", "A100", "GH200", "V5E", "ClusterSim",
+           "simulate_batch_latency", "simulate_trace"]

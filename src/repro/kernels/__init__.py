@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+Each kernel subpackage ships:
+  kernel.py — pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (shape plumbing, padding, GQA mapping)
+  ref.py    — pure-jnp oracle used by the tests' assert_allclose sweeps
+
+Kernels are TARGETED at TPU (MXU-aligned tiles, HBM->VMEM pipelines,
+remote-DMA collectives) and VALIDATED here in interpret mode on CPU.
+The jnp model layers remain the default execution path on CPU; on real TPU
+the ops in this package slot in via the same call signatures.
+
+rd_allreduce is the paper's core kernel: the NVSHMEM GPU-initiated
+recursive-doubling all-reduce, re-expressed with TPU async remote DMA.
+"""

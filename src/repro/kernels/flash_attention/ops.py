@@ -1,0 +1,35 @@
+"""Public wrapper: padding + GQA plumbing for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_call
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret=False):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd) -> (B, Hq, Sq, hd).
+
+    Pads sequence dims to block multiples; padded KV is masked inside the
+    kernel via kv_len, padded Q rows are sliced off.
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_call(q, k, v, causal=causal, window=window,
+                               q_per_kv=Hq // Hkv, kv_len=Skv,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out[:, :, :Sq]
+
+
+__all__ = ["flash_attention"]

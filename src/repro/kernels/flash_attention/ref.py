@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (masked softmax, f32 math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        kv_len=None):
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Skv, hd).  GQA by head grouping."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bugsh,buth->bugst", qg, kf) * (hd ** -0.5)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if kv_len is not None:
+        mask &= kp < kv_len
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bugst,buth->bugsh", p, vf)
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+__all__ = ["flash_attention_ref"]

@@ -1,0 +1,28 @@
+"""Public wrapper: pad the token-capacity and hidden dims to tile multiples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import moe_expert_ffn_call
+
+
+def moe_expert_ffn(x, wg, wu, wd, *, block_c: int = 128,
+                   block_f: int = 128, interpret=False):
+    """x: (E, C, D); wg/wu: (E, D, F); wd: (E, F, D) -> (E, C, D)."""
+    E, C, D = x.shape
+    F = wg.shape[-1]
+    pc = (-C) % block_c
+    pf = (-F) % block_f
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, 0)))
+    if pf:
+        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, pf)))
+        wu = jnp.pad(wu, ((0, 0), (0, 0), (0, pf)))
+        wd = jnp.pad(wd, ((0, 0), (0, pf), (0, 0)))
+    out = moe_expert_ffn_call(x, wg, wu, wd, block_c=block_c,
+                              block_f=block_f, interpret=interpret)
+    return out[:, :C]
+
+
+__all__ = ["moe_expert_ffn"]

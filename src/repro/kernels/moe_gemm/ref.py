@@ -1,0 +1,19 @@
+"""Oracle: the model layer's batched gated expert FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_expert_ffn_ref(x, wg, wu, wd):
+    """x: (E, C, D); wg/wu: (E, D, F); wd: (E, F, D)."""
+    a = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   wg.astype(jnp.float32))
+    b = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   wu.astype(jnp.float32))
+    h = jax.nn.silu(a) * b
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(jnp.float32)
+                      ).astype(x.dtype)
+
+
+__all__ = ["moe_expert_ffn_ref"]

@@ -1,0 +1,4 @@
+from .ops import rd_all_reduce_pallas
+from .ref import rd_all_reduce_ref
+
+__all__ = ["rd_all_reduce_pallas", "rd_all_reduce_ref"]

@@ -1,0 +1,92 @@
+"""Recursive-doubling all-reduce as a single Pallas TPU kernel.
+
+This is the TPU-native re-expression of the paper's NVRAR inter-node phase
+(Algorithm 1, ``RD_inter``): log2(N) XOR-peer exchange steps, each sending
+the full partial sum, chunked into ``n_chunks`` independently-DMA'd pieces so
+the reduction of chunk q overlaps the transfer of chunk q+1 (paper
+Sec. 4.2.1's chunked non-blocking communication).
+
+GPU->TPU mechanism mapping (DESIGN.md §2):
+  NVSHMEM put_nbi            -> pltpu.make_async_remote_copy(...).start()
+  LL fused data+flag payload -> hardware DMA completion semaphores
+                                (recv_sem) — no flag words needed
+  sequence-number sync       -> per-step barrier semaphore handshake with
+                                the peer (prevents recv-buffer reuse races)
+
+The kernel is written for a 1-D logical axis (the slow/DCN axis) inside
+shard_map; x must be the caller's partial sum, padded to
+(n_chunks, chunk_elems).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rd_kernel(x_ref, out_ref, recv_ref, step_sem, send_sem, recv_sem, *,
+               axis_name: str, n_devices: int, n_chunks: int):
+    my = lax.axis_index(axis_name)
+    out_ref[...] = x_ref[...]
+    n_steps = int(math.log2(n_devices))
+
+    for step in range(n_steps):
+        peer = my ^ (1 << step)
+        # --- per-step peer handshake (replaces the paper's sequence
+        # numbers): both sides signal + wait so the peer's recv buffer for
+        # this step parity is known-free before any chunk lands.  The
+        # semaphore is indexed BY STEP: a single shared barrier would let a
+        # fast device's step-(i+1) signal satisfy a slow device's step-i
+        # wait (the race the paper's sequence numbers also prevent).
+        pltpu.semaphore_signal(step_sem.at[step], 1, device_id=peer,
+                               device_id_type=pltpu.DeviceIdType.LOGICAL)
+        pltpu.semaphore_wait(step_sem.at[step], 1)
+
+        parity = step % 2
+        copies = []
+        for c in range(n_chunks):
+            copy = pltpu.make_async_remote_copy(
+                src_ref=out_ref.at[c],
+                dst_ref=recv_ref.at[parity, c],
+                send_sem=send_sem.at[c],
+                recv_sem=recv_sem.at[c],
+                device_id=peer,
+                device_id_type=pltpu.DeviceIdType.LOGICAL,
+            )
+            copy.start()           # non-blocking put (put_nbi analogue)
+            copies.append(copy)
+        for c in range(n_chunks):
+            copies[c].wait()        # send done (our buffer reusable) +
+            #                         recv done (peer's chunk arrived)
+            out_ref[c] = out_ref[c] + recv_ref[parity, c]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("axis_name", "n_devices", "n_chunks",
+                                    "interpret", "collective_id"))
+def rd_all_reduce_kernel_call(x, *, axis_name: str, n_devices: int,
+                              n_chunks: int = 1, interpret=False,
+                              collective_id: int = 7):
+    """x: (n_chunks, chunk_elems) f32/bf16 partial sum (inside shard_map)."""
+    kern = functools.partial(_rd_kernel, axis_name=axis_name,
+                             n_devices=n_devices, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((2,) + tuple(x.shape), x.dtype),   # recv (dbl-buffer)
+            pltpu.SemaphoreType.REGULAR(                   # per-step barrier
+                (max(1, int(math.log2(n_devices))),)),
+            pltpu.SemaphoreType.DMA((n_chunks,)),          # send sems
+            pltpu.SemaphoreType.DMA((n_chunks,)),          # recv sems
+        ],
+        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        interpret=interpret,
+    )(x)

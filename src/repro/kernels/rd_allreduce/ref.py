@@ -1,0 +1,4 @@
+"""Oracle: the lax.ppermute-based recursive doubling from repro.core."""
+from ...core.hierarchical import rd_all_reduce as rd_all_reduce_ref
+
+__all__ = ["rd_all_reduce_ref"]

@@ -1,0 +1,30 @@
+"""Public wrapper for the RWKV6 chunked-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rwkv6_scan_call
+
+
+def rwkv6_scan(r, k, v, logw, u, s0=None, *, chunk: int = 64,
+               interpret=False):
+    """r/k/v/logw: (B, T, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y, s_final) matching models.rwkv.rwkv_scan_ref."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    pad = (-T) % chunk
+    if pad:
+        padder = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padder(r), padder(k), padder(v)
+        logw = padder(logw)  # log-decay 0 => decay 1 (state preserved)
+    y, s_fin = rwkv6_scan_call(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), logw.astype(jnp.float32),
+        u.astype(jnp.float32), s0.astype(jnp.float32),
+        chunk=chunk, interpret=interpret)
+    return y[:, :T], s_fin
+
+
+__all__ = ["rwkv6_scan"]

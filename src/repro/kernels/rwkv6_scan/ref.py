@@ -1,0 +1,4 @@
+"""Oracle: the step-exact RWKV6 recurrence from the model layer."""
+from ...models.rwkv import rwkv_scan_ref as rwkv6_scan_ref
+
+__all__ = ["rwkv6_scan_ref"]

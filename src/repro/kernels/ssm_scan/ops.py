@@ -1,0 +1,37 @@
+"""Public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssm_scan_call
+
+
+def ssm_scan(x, dt, b, c, a, h0=None, *, chunk_t: int = 64,
+             block_c: int = 128, interpret=False):
+    B, T, Ci = x.shape
+    S = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Ci, S), jnp.float32)
+    pad_t = (-T) % chunk_t
+    pad_c = (-Ci) % block_c
+    if pad_t:
+        # dt=0 on padded steps => decay 1, drive 0: state preserved
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_t), (0, 0)))
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_c)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_c)))
+        a = jnp.pad(a, ((0, pad_c), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_c), (0, 0)))
+    y, h_fin = ssm_scan_call(
+        x.astype(jnp.float32), dt.astype(jnp.float32),
+        b.astype(jnp.float32), c.astype(jnp.float32),
+        a.astype(jnp.float32), h0.astype(jnp.float32),
+        chunk_t=chunk_t, block_c=block_c, interpret=interpret)
+    return y[:, :T, :Ci], h_fin[:, :Ci]
+
+
+__all__ = ["ssm_scan"]

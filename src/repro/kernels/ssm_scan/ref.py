@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the selective scan (associative-scan form, matching
+models.ssm.ssm_mixer's inner recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssm_scan_ref(x, dt, b, c, a, h0=None):
+    """x/dt: (B,T,Ci); b/c: (B,T,S); a: (Ci,S); h0: (B,Ci,S).
+    Returns (y (B,T,Ci), h_fin)."""
+    B, T, Ci = x.shape
+    S = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * a[None, None])          # (B,T,Ci,S)
+    drive = (dtf * xf)[..., None] * b[:, :, None, :].astype(jnp.float32)
+    if h0 is not None:
+        drive = drive.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("btcs,bts->btc", hs, c.astype(jnp.float32))
+    return y, hs[:, -1]
+
+
+__all__ = ["ssm_scan_ref"]

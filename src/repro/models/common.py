@@ -1,0 +1,236 @@
+"""Shared model-definition machinery: configs, init helpers, and the GQA
+head-padding planner that makes any (n_heads, n_kv_heads) pair TP-shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    # SSM (mamba-style; used by hybrid hymba)
+    ssm_state: int = 0
+    d_inner: int = 0
+    d_conv: int = 4
+    dt_rank: int = 0
+    # RWKV6
+    rwkv_head_dim: int = 64
+    decay_lora: int = 64
+    # attention details
+    qkv_bias: bool = False
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 1.0e4
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0                 # precomputed frame embeddings length
+    # VLM (pixtral): patches arrive pre-embedded (frontend stub per task spec)
+    n_patches: int = 0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1.0e-5
+    dtype: Any = jnp.bfloat16
+    max_seq: int = 32768
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        if self.family not in ("ssm",):
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0, \
+                f"{self.name}: q heads must be a multiple of kv heads"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def vocab_padded(self, tp: int) -> int:
+        return pad_to(self.vocab_size, tp)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline cross-checks)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        n = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if not self.attn_free:
+            hq = self.n_heads * self.head_dim
+            hkv = self.n_kv_heads * self.head_dim
+            per_layer += d * (hq + 2 * hkv) + hq * d  # qkvo
+        if self.family == "ssm":   # rwkv6 time-mix + channel-mix
+            per_layer += 4 * d * d + d * self.decay_lora * 2
+            per_layer += d * f + f * d + d * d
+        elif self.is_moe:
+            per_layer += d * self.n_experts  # router
+            per_layer += self.n_experts * 3 * d * self.d_ff_expert
+        else:
+            mult = 3 if self.act == "swiglu" else 2
+            per_layer += mult * d * f
+        if self.family == "hybrid":  # mamba branch (hymba)
+            di, s = self.d_inner, self.ssm_state
+            per_layer += d * 2 * di + di * (self.dt_rank + 2 * s) \
+                + self.dt_rank * di + di * s + di + di * d
+        if self.enc_layers:  # whisper: decoder cross-attention ...
+            hq = self.n_heads * self.head_dim
+            hkv = self.n_kv_heads * self.head_dim
+            per_layer += d * (hq + 2 * hkv) + hq * d
+        n += L * per_layer
+        if self.enc_layers:  # ... plus encoder (attention + gelu mlp)
+            hq = self.n_heads * self.head_dim
+            n += self.enc_layers * (4 * d * hq + 2 * d * f)
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        inactive = self.n_layers * (self.n_experts - self.top_k) \
+            * 3 * self.d_model * self.d_ff_expert
+        return full - inactive
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# GQA head-padding planner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GQAPlan:
+    """Slot layout making an arbitrary (n_q, n_kv) GQA TP-shardable.
+
+    Each of ``tp`` devices gets ``u`` kv slots and ``u*g`` q slots; q slot
+    ``(s, j)`` (kv slot s, j < g) attends to kv slot ``s``.  Original heads
+    are packed into slots unit-by-unit (a unit = one kv head + up to ``g`` of
+    its q heads); kv heads whose q heads span several units are *replicated*.
+    Dead slots carry zero weights and are masked in the layer.  ``g`` is
+    chosen to minimize padded-FLOPs overhead.
+    """
+
+    tp: int
+    n_q: int
+    n_kv: int
+    g: int                 # q slots per kv slot
+    u: int                 # kv slots per device
+    q_map: Tuple[int, ...]   # len tp*u*g, original q-head idx or -1
+    kv_map: Tuple[int, ...]  # len tp*u, original kv-head idx or -1
+
+    @property
+    def q_slots(self) -> int:
+        return self.tp * self.u * self.g
+
+    @property
+    def kv_slots(self) -> int:
+        return self.tp * self.u
+
+    @property
+    def q_slots_local(self) -> int:
+        return self.u * self.g
+
+    @property
+    def kv_slots_local(self) -> int:
+        return self.u
+
+    @property
+    def flops_overhead(self) -> float:
+        """padded q slots / live q heads (>= 1)."""
+        return self.q_slots / self.n_q
+
+    def q_mask(self) -> np.ndarray:
+        return (np.asarray(self.q_map) >= 0).astype(np.float32)
+
+
+def plan_gqa(n_q: int, n_kv: int, tp: int) -> GQAPlan:
+    q_per_kv = n_q // n_kv
+    assert n_q == n_kv * q_per_kv
+    best = None
+    for g in range(1, q_per_kv + 1):
+        units = n_kv * math.ceil(q_per_kv / g)
+        u = math.ceil(units / tp)
+        q_slots, kv_slots = tp * u * g, tp * u
+        key = (q_slots, kv_slots)
+        if best is None or key < best[0]:
+            best = (key, g, u)
+    _, g, u = best
+    q_map = [-1] * (tp * u * g)
+    kv_map = [-1] * (tp * u)
+    # Build the unit list: (kv_head, [q heads]) chunks of size <= g.
+    units = []
+    for kv in range(n_kv):
+        qs = list(range(kv * q_per_kv, (kv + 1) * q_per_kv))
+        for c in range(0, len(qs), g):
+            units.append((kv, qs[c:c + g]))
+    assert len(units) <= tp * u
+    for j, (kv, qs) in enumerate(units):
+        dev, slot = divmod(j, u)
+        kv_map[dev * u + slot] = kv
+        for jj, q in enumerate(qs):
+            q_map[(dev * u + slot) * g + jj] = q
+    return GQAPlan(tp=tp, n_q=n_q, n_kv=n_kv, g=g, u=u,
+                   q_map=tuple(q_map), kv_map=tuple(kv_map))
+
+
+def place_heads(w: jax.Array, head_map, axis: int = 0) -> jax.Array:
+    """Scatter per-head weights into a padded slot layout.
+
+    ``w``: array with original head count along ``axis``; returns an array
+    with ``len(head_map)`` slots along ``axis``; dead slots (map −1) zero.
+    """
+    head_map = np.asarray(head_map)
+    w = jnp.moveaxis(w, axis, 0)
+    gathered = jnp.where(
+        (head_map >= 0).reshape((-1,) + (1,) * (w.ndim - 1)),
+        w[np.maximum(head_map, 0)], 0.0)
+    return jnp.moveaxis(gathered, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], fan_in: int,
+               dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+__all__ = ["ModelConfig", "GQAPlan", "plan_gqa", "place_heads", "pad_to",
+           "dense_init", "split_keys", "FAMILIES"]

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths, selected by token count (mirroring real inference
+engines and the paper's Sec. 5.2.4 TP x EP deployments):
+
+* ``dispatch`` (train / prefill): sort-based capacity dispatch +
+  ``lax.all_to_all`` over the EP axes.  Tokens are routed to the devices
+  owning their experts; capacity overflow drops tokens (standard
+  capacity-factor semantics, reported via aux stats).
+* ``dense`` (decode): token counts are tiny (B x 1), so every device runs its
+  local experts on *all* tokens, masks by the router's top-k gates, and the
+  combine is a TP all-reduce — which routes decode MoE traffic through the
+  paper's optimized collective.
+
+Experts are sharded over the EP axes (== the TP "model" axis); attention and
+router stay TP/replicated, matching the paper's Qwen3-235B deployment.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.pcontext import ParallelCtx
+from ..core import hierarchical as hier
+from .common import ModelConfig, dense_init, split_keys
+from .layers import tp_rank
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    """Experts in global layout (E, ...); sharded on the expert axis."""
+    d, fe, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    kr, kg, ku, kd = split_keys(key, 4)
+    return {
+        "router": dense_init(kr, (d, e), d, jnp.float32),
+        "wg": dense_init(kg, (e, d, fe), d, cfg.dtype),
+        "wu": dense_init(ku, (e, d, fe), d, cfg.dtype),
+        "wd": dense_init(kd, (e, fe, d), fe, cfg.dtype),
+    }
+
+
+def _router(p: Params, x2d: jax.Array, cfg: ModelConfig):
+    """x2d: (T, D) -> gates (T, K) normalized, idx (T, K), probs (T, E)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def aux_load_balance(probs: jax.Array, idx: jax.Array,
+                     cfg: ModelConfig) -> jax.Array:
+    """Switch-style load-balancing loss: E * sum_e f_e * p_e."""
+    e = cfg.n_experts
+    f = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=0)
+    return e * jnp.sum(f * pbar) * cfg.top_k
+
+
+def _expert_ffn(p: Params, x: jax.Array) -> jax.Array:
+    """x: (E_loc, C, D) -> (E_loc, C, D); batched gated-SiLU experts."""
+    a = jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    b = jnp.einsum("ecd,edf->ecf", x, p["wu"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * b, p["wd"])
+
+
+def moe_ffn_dispatch(p: Params, x: jax.Array, cfg: ModelConfig,
+                     ctx: ParallelCtx) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based capacity dispatch with EP all-to-all.
+
+    x: (B, S, D) local tokens (sequence-sharded under SP).  Returns
+    (out, aux_loss).  Per-device expert shard size E_loc = E / ep_size.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    ep = hier.axes_size(ctx.ep) if ctx.ep else 1
+    E_loc = E // ep
+    x2 = x.reshape(T, D)
+    gates, idx, probs = _router(p, x2, cfg)
+    aux = aux_load_balance(probs, idx, cfg)
+
+    cap = int(np.ceil(T * K / E * cfg.capacity_factor))
+    cap = max(cap, 4)
+
+    # Flatten (token, k) pairs and sort by expert.
+    e_flat = idx.reshape(-1)                       # (T*K,)
+    t_flat = jnp.repeat(jnp.arange(T), K)          # (T*K,)
+    g_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, t_s, g_s = e_flat[order], t_flat[order], g_flat[order]
+    # position of each entry within its expert group
+    starts = jnp.searchsorted(e_s, jnp.arange(E), side="left")
+    pos = jnp.arange(T * K) - starts[e_s]
+    keep = pos < cap
+
+    # Scatter into the (E, cap, D) send buffer.
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    gbuf = jnp.zeros((E, cap), jnp.float32)
+    src = jnp.where(keep, t_s, 0)
+    be = jnp.where(keep, e_s, 0)
+    bp = jnp.where(keep, pos, cap - 1)
+    vals = jnp.where(keep[:, None], x2[src], 0)
+    buf = buf.at[be, bp].add(vals)
+    gbuf = gbuf.at[be, bp].add(jnp.where(keep, g_s, 0.0))
+
+    if ep > 1:
+        # (E, cap, D) -> send expert block i to device i.
+        buf = buf.reshape(ep, E_loc * cap, D)
+        buf = lax.all_to_all(buf, ctx.ep, split_axis=0, concat_axis=0,
+                             tiled=True)
+        # now (ep * E_loc * cap, D) grouped by source device; regroup by
+        # local expert: (ep, E_loc, cap, D) -> (E_loc, ep*cap, D)
+        buf = buf.reshape(ep, E_loc, cap, D).transpose(1, 0, 2, 3) \
+            .reshape(E_loc, ep * cap, D)
+    else:
+        buf = buf.reshape(E_loc, cap, D)
+
+    out_buf = _expert_ffn({k: v for k, v in p.items()}, buf)
+
+    if ep > 1:
+        out_buf = out_buf.reshape(E_loc, ep, cap, D).transpose(1, 0, 2, 3) \
+            .reshape(ep, E_loc * cap, D)
+        out_buf = lax.all_to_all(out_buf, ctx.ep, split_axis=0,
+                                 concat_axis=0, tiled=True)
+    out_buf = out_buf.reshape(E, cap, D)
+
+    # Combine: gather each kept (token,k) contribution back, weighted.
+    contrib = out_buf[be, bp] * (gbuf[be, bp][:, None]).astype(out_buf.dtype)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    out = jnp.zeros((T, D), jnp.float32).at[t_s].add(
+        contrib.astype(jnp.float32))
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_ffn_dense(p: Params, x: jax.Array, cfg: ModelConfig,
+                  ctx: ParallelCtx) -> jax.Array:
+    """Decode path: all local experts on all tokens, gate-masked.
+
+    x: (B, S, D) *replicated* over TP.  Returns the TP-partial combine (the
+    caller's tp_all_reduce completes it — the paper's collective).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.n_experts
+    ep = hier.axes_size(ctx.ep) if ctx.ep else 1
+    E_loc = E // ep
+    x2 = x.reshape(T, D)
+    gates, idx, _ = _router(p, x2, cfg)
+    # dense per-token per-local-expert weights (T, E_loc)
+    w_full = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], idx].add(gates)
+    e0 = tp_rank(ctx.replace(tp_slow=(), tp_fast=ctx.ep)) * E_loc if ctx.ep \
+        else 0
+    w_loc = lax.dynamic_slice_in_dim(w_full, e0, E_loc, axis=1) if ctx.ep \
+        else w_full
+    xe = jnp.broadcast_to(x2[None], (E_loc, T, D))
+    ye = _expert_ffn(p, xe)                       # (E_loc, T, D)
+    out = jnp.einsum("etd,te->td", ye.astype(jnp.float32), w_loc)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx,
+            *, decode: bool) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Returns (output, aux_loss_or_None).
+
+    decode=True  -> dense path, output is TP-PARTIAL (reduce at call site).
+    decode=False -> dispatch path, output is complete (all-to-all combined).
+    """
+    if decode:
+        return moe_ffn_dense(p, x, cfg, ctx), None
+    out, aux = moe_ffn_dispatch(p, x, cfg, ctx)
+    return out, aux
+
+
+__all__ = ["init_moe", "moe_ffn", "moe_ffn_dispatch", "moe_ffn_dense",
+           "aux_load_balance"]

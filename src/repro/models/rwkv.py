@@ -1,0 +1,276 @@
+"""RWKV6 ("Finch") blocks: time-mix with data-dependent per-channel decay and
+channel-mix FFN.
+
+Faithfulness notes (see DESIGN.md §Assumptions): the data-dependent decay
+LoRA — the defining RWKV6 feature — is implemented exactly
+(``w_t = exp(-exp(w0 + tanh(x_w @ w_a) @ w_b))``); the token-shift
+interpolation uses static per-channel mixing vectors (RWKV6's dynamic ddlerp
+LoRA on the shift mix is folded into the decay LoRA's capacity).
+
+Sharding: heads (A = n_heads * 64 channels) are TP-sharded for r/k/v/g/decay
+and the recurrent state; w_o is row-sharded (TP-partial output).  The
+channel-mix returns a *stacked* (value, receptance-logit) partial so the
+caller completes both with one fused all-reduce and applies the sigmoid gate
+after reduction — keeping the paper's one-collective-per-sublayer structure.
+
+The sequence recurrence per head (key dim x value dim state S):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+is evaluated in a chunked parallel form (flash-linear-attention style) for
+full sequences and as a single-step update for decode.  ``rwkv_scan_ref`` is
+the step-exact oracle used by tests and by kernels/rwkv6_scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.pcontext import ParallelCtx
+from .common import ModelConfig, dense_init, split_keys
+
+Params = Dict[str, jax.Array]
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    a = d  # attention dim == d_model (heads = d / 64)
+    kr, kk, kv_, kg, ka, kb, ko = split_keys(key, 7)
+    hd = cfg.rwkv_head_dim
+    nh = a // hd
+    return {
+        "mu": jnp.full((5, d), 0.5, cfg.dtype),  # r,k,v,w,g shift mixes
+        "w_r": dense_init(kr, (d, a), d, cfg.dtype),
+        "w_k": dense_init(kk, (d, a), d, cfg.dtype),
+        "w_v": dense_init(kv_, (d, a), d, cfg.dtype),
+        "w_g": dense_init(kg, (d, a), d, cfg.dtype),
+        "w0": jnp.tile(jnp.linspace(-6.0, -0.5, hd)[None, :],
+                       (nh, 1)).reshape(a).astype(jnp.float32),
+        "w_a": dense_init(ka, (d, cfg.decay_lora), d, cfg.dtype),
+        "w_b": dense_init(kb, (cfg.decay_lora, a), cfg.decay_lora,
+                          cfg.dtype),
+        "u": jnp.zeros((a,), jnp.float32),
+        "ln_w": jnp.ones((a,), cfg.dtype),
+        "ln_b": jnp.zeros((a,), cfg.dtype),
+        "w_o": dense_init(ko, (a, d), a, cfg.dtype),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    kk, kv_, kr = split_keys(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, cfg.dtype),  # k, r shift mixes
+        "wk": dense_init(kk, (d, f), d, cfg.dtype),
+        "wv": dense_init(kv_, (f, d), f, cfg.dtype),
+        "wr": dense_init(kr, (d, d), d, cfg.dtype),  # row-sharded
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along the sequence; ``prev`` (B, D) seeds position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu[None, None, :]
+
+
+def _group_norm(y: jax.Array, w: jax.Array, b: jax.Array, hd: int,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm over the value channels.  y: (B,T,H,hd)."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(yf - mu), axis=-1, keepdims=True)
+    yn = (yf - mu) * lax.rsqrt(var + eps)
+    B, T, H, _ = y.shape
+    return yn.reshape(B, T, -1) * w[None, None, :] + b[None, None, :]
+
+
+def _rkvwg(p: Params, x: jax.Array, prev: Optional[jax.Array], hd: int):
+    xs = _shift(x, prev)
+    mu = p["mu"]
+    xr = _mix(x, xs, mu[0])
+    xk = _mix(x, xs, mu[1])
+    xv = _mix(x, xs, mu[2])
+    xw = _mix(x, xs, mu[3])
+    xg = _mix(x, xs, mu[4])
+    r = jnp.einsum("btd,da->bta", xr, p["w_r"])
+    k = jnp.einsum("btd,da->bta", xk, p["w_k"])
+    v = jnp.einsum("btd,da->bta", xv, p["w_v"])
+    g = jnp.einsum("btd,da->bta", xg, p["w_g"])
+    # data-dependent decay (the RWKV6 signature feature)
+    lora = jnp.einsum("btl,la->bta",
+                      jnp.tanh(jnp.einsum("btd,dl->btl", xw, p["w_a"])),
+                      p["w_b"]).astype(jnp.float32)
+    logw = -jnp.exp(p["w0"][None, None, :] + lora)     # log decay < 0
+    B, T, A = r.shape
+    H = A // hd
+    hview = lambda t: t.reshape(B, T, H, hd)
+    return (hview(r.astype(jnp.float32)), hview(k.astype(jnp.float32)),
+            hview(v.astype(jnp.float32)), g, hview(logw), x[:, -1, :])
+
+
+def rwkv_scan_ref(r, k, v, logw, u, s0=None):
+    """Step-exact recurrence (oracle).  r/k/v/logw: (B,T,H,hd) f32;
+    u: (H, hd); s0: (B,H,hd,hd).  Returns y (B,T,H,hd), s_final."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                      # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,hd,hd)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lwt)[..., :, None] * s + kv
+        return s, yt
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    s_fin, ys = lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def rwkv_scan_chunked(r, k, v, logw, u, s0=None, chunk: int = 64):
+    """Chunked parallel evaluation of the same recurrence (train/prefill).
+
+    Within a chunk of length C: with L_t = cumsum(logw)_t (inclusive),
+      y_t = r_t . diag(exp(L_{t-1})) S_in                       (inter-chunk)
+            + sum_{s<t} (r_t * exp(L_{t-1}-L_s)) . k_s v_s^T    (intra)
+            + (r_t * u) . k_t v_t^T                             (diagonal)
+      S_out = diag(exp(L_C)) S_in + sum_s diag(exp(L_C - L_s)) k_s v_s^T
+    """
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    if pad:
+        padder = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padder(r), padder(k), padder(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    C = chunk
+    resh = lambda t: t.reshape(B, n, C, H, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+
+    def body(s, inp):
+        rb, kb, vb, wb = inp                       # (B,C,H,hd)
+        L = jnp.cumsum(wb, axis=1)                 # inclusive per-channel
+        Lm1 = L - wb                               # exclusive (L_{t-1})
+        # inter-chunk: r_t decayed against carried state
+        rdec = rb * jnp.exp(Lm1)
+        y = jnp.einsum("bthk,bhkv->bthv", rdec, s)
+        # intra-chunk: scores_ts = sum_c r_tc k_sc exp(L(t-1)c - L(s)c)
+        # (exponent clipped for f32 safety; clipped terms are multiplied by
+        # exp(L_{t-1}) ~ 0 in exactly those regimes)
+        kdec = kb * jnp.exp(jnp.minimum(-L, 60.0))
+        scores = jnp.einsum("bthc,bshc->bhts", rdec, kdec)
+        mask = jnp.tril(jnp.ones((C, C), bool), -1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = y + jnp.einsum("bhts,bshv->bthv", scores, vb)
+        # diagonal (current token) with bonus u:  y += (r . (u*k)) v
+        y = y + jnp.sum(rb * u[None, None] * kb, axis=-1, keepdims=True) * vb
+        # state update
+        Lc = L[:, -1:, :, :]                       # (B,1,H,hd)
+        kfac = kb * jnp.exp(Lc - L)
+        s_new = jnp.exp(Lc[:, 0])[..., :, None] * s \
+            + jnp.einsum("bshk,bshv->bhkv", kfac, vb)
+        return s_new, y
+
+    s_fin, ys = lax.scan(body, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * C, H, hd)
+    return y[:, :T], s_fin
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+                  ctx: ParallelCtx,
+                  state: Optional[Dict[str, jax.Array]] = None,
+                  return_state: bool = False, chunk: int = 64):
+    """Full-sequence time-mix.  Returns TP-partial (B,T,D) output."""
+    hd = cfg.rwkv_head_dim
+    prev = state["shift_tm"] if state is not None else None
+    r, k, v, g, logw, last = _rkvwg(p, x, prev, hd)
+    H = r.shape[2]
+    u = p["u"].reshape(H, hd)
+    s0 = state["wkv"] if state is not None else None
+    y, s_fin = rwkv_scan_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y = _group_norm(y, p["ln_w"], p["ln_b"], hd)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bta,ad->btd", y, p["w_o"])
+    if return_state:
+        return out, {"shift_tm": last, "wkv": s_fin}
+    return out
+
+
+def rwkv_time_mix_step(p: Params, x: jax.Array,
+                       state: Dict[str, jax.Array], cfg: ModelConfig,
+                       ctx: ParallelCtx):
+    """Single-token decode step.  x: (B,1,D)."""
+    hd = cfg.rwkv_head_dim
+    r, k, v, g, logw, last = _rkvwg(p, x, state["shift_tm"], hd)
+    H = r.shape[2]
+    u = p["u"].reshape(H, hd)
+    rt, kt, vt, lwt = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]
+    kv = kt[..., :, None] * vt[..., None, :]
+    s = state["wkv"]
+    yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+    s_new = jnp.exp(lwt)[..., :, None] * s + kv
+    y = _group_norm(yt[:, None], p["ln_w"], p["ln_b"], hd)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bta,ad->btd", y, p["w_o"])
+    return out, {"shift_tm": last, "wkv": s_new}
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+                     ctx: ParallelCtx,
+                     state: Optional[Dict[str, jax.Array]] = None,
+                     return_state: bool = False):
+    """Channel-mix.  Returns STACKED TP-partials (2, B, T, D): [value,
+    receptance-logit]; caller reduces once and gates:
+    ``out = sigmoid(r) * v``."""
+    prev = state["shift_cm"] if state is not None else None
+    xs = _shift(x, prev)
+    xk = _mix(x, xs, p["mu"][0])
+    xr = _mix(x, xs, p["mu"][1])
+    kk = jnp.einsum("btd,df->btf", xk, p["wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    val = jnp.einsum("btf,fd->btd", kk, p["wv"])
+    # wr is row-sharded: contract this device's slice of xr with its rows so
+    # the receptance logit is a TP-partial just like ``val``.
+    dloc = p["wr"].shape[0]
+    if dloc != xr.shape[-1]:
+        from .layers import tp_rank  # local import to avoid cycle
+        start = tp_rank(ctx) * dloc
+        xr_loc = lax.dynamic_slice_in_dim(xr, start, dloc, axis=-1)
+    else:
+        xr_loc = xr
+    rlog = jnp.einsum("btd,de->bte", xr_loc, p["wr"])
+    stacked = jnp.stack([val, rlog.astype(val.dtype)], axis=0)
+    if return_state:
+        return stacked, {"shift_cm": x[:, -1, :]}
+    return stacked
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, heads_local: int,
+                    d_ff_unused: int = 0, dtype=jnp.bfloat16
+                    ) -> Dict[str, jax.Array]:
+    hd = cfg.rwkv_head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, heads_local, hd, hd), jnp.float32),
+    }
+
+
+__all__ = [
+    "init_rwkv_time_mix", "init_rwkv_channel_mix", "rwkv_time_mix",
+    "rwkv_time_mix_step", "rwkv_channel_mix", "rwkv_scan_ref",
+    "rwkv_scan_chunked", "init_rwkv_state",
+]

@@ -1,0 +1,151 @@
+"""Selective-state-space (Mamba-style) mixer, used by the hymba hybrid blocks.
+
+Mamba2-flavoured projections (x, z, B, C, dt all projected from the block
+input) so that TP sharding is clean: x/z/dt are d_inner-sharded, B/C are tiny
+and computed replicated.  The sequence recurrence
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D_skip * x_t
+
+is evaluated with ``lax.associative_scan`` for full sequences (train /
+prefill) and as a single-step update for decode.  The output projection is
+row-sharded, so the mixer returns a TP-partial sum like every other mixer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.pcontext import ParallelCtx
+from .common import ModelConfig, dense_init, split_keys
+
+Params = Dict[str, jax.Array]
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    d, di, s = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    kx, kz, kbc, kdt, kcv, ko = split_keys(key, 6)
+    # A initialized to -[1..state] per channel (S4D-real), stored as log.
+    a = jnp.tile(jnp.arange(1, s + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        # x and z projections kept as separate leaves so the d_inner axis
+        # TP-shards cleanly (a fused (d, 2*di) matrix would interleave
+        # shards of x and z).
+        "w_x": dense_init(kx, (d, di), d, cfg.dtype),
+        "w_z": dense_init(kz, (d, di), d, cfg.dtype),
+        "w_bc": dense_init(kbc, (d, 2 * s), d, cfg.dtype),
+        "w_dt": dense_init(kdt, (d, di), d, cfg.dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "conv_w": dense_init(kcv, (cfg.d_conv, di), cfg.d_conv, cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "A_log": jnp.log(a),                       # (di, s) f32
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ko, (di, d), di, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x: (B, T, C); w: (K, C).  init_state: (B, K-1, C)
+    prepended history (zeros if None)."""
+    K = w.shape[0]
+    B, T, C = x.shape
+    if init_state is None:
+        init_state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + T, :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssd_inputs(p: Params, h: jax.Array, cfg: ModelConfig):
+    """Common projections.  h: (B,T,D) -> x,z:(B,T,Ci), bc:(B,T,2s), dt:(B,T,Ci)."""
+    x = jnp.einsum("btd,de->bte", h, p["w_x"])
+    z = jnp.einsum("btd,de->bte", h, p["w_z"])
+    bc = jnp.einsum("btd,de->bte", h, p["w_bc"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,de->bte", h, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"][None, None, :])
+    return x, z, bc, dt
+
+
+def ssm_mixer(p: Params, h: jax.Array, cfg: ModelConfig, ctx: ParallelCtx,
+              state: Optional[Dict[str, jax.Array]] = None,
+              return_state: bool = False):
+    """Full-sequence selective scan.  Returns TP-partial (B,T,D) output
+    (and the final recurrent state when ``return_state``)."""
+    B, T, D = h.shape
+    s = cfg.ssm_state
+    x_in, z, bc, dt = _ssd_inputs(p, h, cfg)
+    conv_init = state["conv"] if state is not None else None
+    x = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], conv_init))
+    xf = x.astype(jnp.float32)
+    Bm, Cm = bc[..., :s], bc[..., s:]                  # (B,T,s)
+    A = -jnp.exp(p["A_log"])                           # (Ci,s)
+    decay = jnp.exp(dt[..., None] * A[None, None])     # (B,T,Ci,s)
+    drive = (dt * xf)[..., None] * Bm[:, :, None, :]   # (B,T,Ci,s)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    h0 = state["ssm"] if state is not None else None
+    if h0 is not None:
+        # fold the carried-in state into the first step's drive
+        drive = drive.at[:, 0].add(decay[:, 0] * h0)
+    a_c, b_c = lax.associative_scan(combine, (decay, drive), axis=1)
+    hs = b_c                                           # (B,T,Ci,s)
+    y = jnp.einsum("btcs,bts->btc", hs, Cm)
+    y = y + p["D_skip"][None, None, :] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+    out = jnp.einsum("btc,cd->btd", y, p["w_out"])
+    if return_state:
+        new_state = {
+            "conv": jnp.concatenate(
+                [state["conv"] if state is not None else
+                 jnp.zeros((B, cfg.d_conv - 1, x_in.shape[-1]), x_in.dtype),
+                 x_in], axis=1)[:, -(cfg.d_conv - 1):, :],
+            "ssm": hs[:, -1],
+        }
+        return out, new_state
+    return out
+
+
+def ssm_step(p: Params, h: jax.Array, state: Dict[str, jax.Array],
+             cfg: ModelConfig, ctx: ParallelCtx
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  h: (B,1,D); state: conv (B,K-1,Ci), ssm (B,Ci,s)."""
+    s = cfg.ssm_state
+    x, z, bc, dt = _ssd_inputs(p, h, cfg)
+    # conv update
+    hist = jnp.concatenate([state["conv"], x], axis=1)     # (B,K,Ci)
+    xc = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"][None]
+    xc = jax.nn.silu(xc)[:, None, :]                       # (B,1,Ci)
+    new_conv = hist[:, 1:]
+    xf = xc.astype(jnp.float32)
+    Bm, Cm = bc[..., :s], bc[..., s:]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * A[None, None])[:, 0]   # (B,Ci,s)
+    drive = (dt * xf)[..., None][:, 0] * Bm[:, 0, None, :]
+    new_ssm = decay * state["ssm"] + drive
+    y = jnp.einsum("bcs,bs->bc", new_ssm, Cm[:, 0])
+    y = y + p["D_skip"][None] * xf[:, 0]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None, :]
+    out = jnp.einsum("btc,cd->btd", y.astype(h.dtype), p["w_out"])
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, d_inner_local: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner_local), dtype),
+        "ssm": jnp.zeros((batch, d_inner_local, cfg.ssm_state), jnp.float32),
+    }
+
+
+__all__ = ["init_ssm", "ssm_mixer", "ssm_step", "init_ssm_state"]

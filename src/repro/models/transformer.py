@@ -1,0 +1,535 @@
+"""Model assembly: blocks per family, LM forward, decode step, caches.
+
+The same code path serves every assigned architecture:
+
+==========  ================================================================
+dense       llama3.2-1b, codeqwen1.5-7b, qwen1.5-32b, mistral-large-123b
+moe         dbrx-132b (16e top-4), qwen3-moe-30b-a3b (128e top-8)
+hybrid      hymba-1.5b (parallel attention + mamba heads per block)
+ssm         rwkv6-7b (attention-free time-mix/channel-mix)
+encdec      whisper-medium (stub conv frontend -> encoder -> causal decoder
+            with cross-attention)
+vlm         pixtral-12b (stub ViT frontend -> dense decoder; patch embeddings
+            overwrite the first n_patches positions)
+==========  ================================================================
+
+All functions run single-device (LOCAL ctx) or inside shard_map; layer
+weights are stacked along a leading layer axis so the stack can be scanned
+(`scan_layers=True`, small compiled HLO + realistic memory analysis) or
+unrolled (`scan_layers=False`, exact `cost_analysis` FLOP counting for the
+roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.pcontext import ParallelCtx
+from ..core import hierarchical as hier
+from .common import ModelConfig, GQAPlan, plan_gqa, pad_to, split_keys
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import rwkv as R
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Architecture plan (static per (config, tp))
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchPlan:
+    cfg: ModelConfig
+    tp: int
+    gqa: Optional[GQAPlan]
+    vocab_pad: int
+
+    @property
+    def q_mask_tbl(self) -> Optional[np.ndarray]:
+        if self.gqa is None:
+            return None
+        m = self.gqa.q_mask().reshape(self.tp, self.gqa.q_slots_local)
+        if m.min() >= 1.0:
+            return None  # no dead slots, skip the mask multiply
+        return m
+
+    @property
+    def d_ff_local(self) -> int:
+        return self.cfg.d_ff // self.tp
+
+    @property
+    def d_inner_local(self) -> int:
+        return self.cfg.d_inner // self.tp
+
+    @property
+    def rwkv_heads_local(self) -> int:
+        return self.cfg.d_model // self.cfg.rwkv_head_dim // self.tp
+
+    def flops_overhead(self) -> float:
+        return self.gqa.flops_overhead if self.gqa else 1.0
+
+
+def make_plan(cfg: ModelConfig, tp: int) -> ArchPlan:
+    gqa = None
+    if not cfg.attn_free:
+        gqa = plan_gqa(cfg.n_heads, cfg.n_kv_heads, tp)
+    for dim, name in ((cfg.d_model, "d_model"), (cfg.d_ff, "d_ff")):
+        if cfg.family != "moe" and dim % tp:
+            raise ValueError(f"{cfg.name}: {name}={dim} not divisible by tp={tp}")
+    return ArchPlan(cfg=cfg, tp=tp, gqa=gqa, vocab_pad=pad_to(cfg.vocab_size, tp))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, ap: ArchPlan) -> Params:
+    cfg = ap.cfg
+    ks = split_keys(key, 8)
+    if cfg.family == "ssm":
+        return {"ln1": L.init_norm(cfg), "tm": R.init_rwkv_time_mix(ks[0], cfg),
+                "ln2": L.init_norm(cfg), "cm": R.init_rwkv_channel_mix(ks[1], cfg)}
+    p: Params = {"ln1": L.init_norm(cfg),
+                 "attn": L.init_attention(ks[0], cfg, ap.gqa),
+                 "ln2": L.init_norm(cfg)}
+    if cfg.family == "hybrid":
+        p["ssm"] = S.init_ssm(ks[1], cfg)
+        p["beta"] = jnp.ones((2,), jnp.float32)
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    elif cfg.is_moe:
+        p["moe"] = M.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cfg.enc_layers:  # whisper decoder block: add cross-attention
+        p["ln_x"] = L.init_norm(cfg)
+        p["xattn"] = L.init_attention(ks[3], cfg, ap.gqa)
+    return p
+
+
+def _init_enc_block(key, ap: ArchPlan) -> Params:
+    cfg = ap.cfg
+    k1, k2 = split_keys(key, 2)
+    return {"ln1": L.init_norm(cfg), "attn": L.init_attention(k1, cfg, ap.gqa),
+            "ln2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+
+def _stack(blocks):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(key, ap: ArchPlan) -> Params:
+    cfg = ap.cfg
+    keys = split_keys(key, cfg.n_layers + cfg.enc_layers + 2)
+    p: Params = {
+        "embed": L.init_embed(keys[0], cfg, ap.vocab_pad),
+        "blocks": _stack([_init_block(keys[1 + i], ap)
+                          for i in range(cfg.n_layers)]),
+        "final_norm": L.init_norm(cfg),
+    }
+    if cfg.enc_layers:
+        off = 1 + cfg.n_layers
+        p["enc_blocks"] = _stack([_init_enc_block(keys[off + i], ap)
+                                  for i in range(cfg.enc_layers)])
+        p["enc_norm"] = L.init_norm(cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _residual(x, partial, ctx: ParallelCtx, sp: bool):
+    if sp:
+        return x + hier.tp_reduce_scatter(partial, ctx, dim=1)
+    return x + hier.tp_all_reduce(partial, ctx, scatter_dim=-1)
+
+
+def _gathered(x, ctx: ParallelCtx, sp: bool):
+    return hier.tp_all_gather(x, ctx, dim=1) if sp else x
+
+
+def _moe_tokens(h, ctx: ParallelCtx, sp: bool):
+    """MoE consumes per-device-unique tokens: under SP the shard already is;
+    otherwise slice this device's sequence chunk (no comm)."""
+    if sp or not ctx.has_tp:
+        return h
+    tp = hier.axes_size(ctx.tp_axes)
+    s_loc = h.shape[1] // tp
+    start = L.tp_rank(ctx) * s_loc
+    return lax.dynamic_slice_in_dim(h, start, s_loc, axis=1)
+
+
+def _moe_restore(out, ctx: ParallelCtx, sp: bool):
+    if sp or not ctx.has_tp:
+        return out
+    return lax.all_gather(out, ctx.tp_axes, axis=1, tiled=True)
+
+
+def block_forward(bp: Params, x, ap: ArchPlan, ctx: ParallelCtx, *,
+                  positions, sp: bool, causal: bool = True,
+                  enc_kv=None, chunk: int = 0,
+                  collect_state: bool = False):
+    """One block, full sequence.  Returns (x, aux_loss, state_or_None)."""
+    cfg = ap.cfg
+    aux = jnp.zeros((), jnp.float32)
+    state = {}
+    if cfg.family == "ssm":
+        h = _gathered(L.apply_norm(x, bp["ln1"], cfg), ctx, sp)
+        if collect_state:
+            tm, st = R.rwkv_time_mix(bp["tm"], h, cfg, ctx, return_state=True)
+            state.update(st)
+        else:
+            tm = R.rwkv_time_mix(bp["tm"], h, cfg, ctx)
+        x = _residual(x, tm, ctx, sp)
+        h2 = _gathered(L.apply_norm(x, bp["ln2"], cfg), ctx, sp)
+        if collect_state:
+            stacked, st2 = R.rwkv_channel_mix(bp["cm"], h2, cfg, ctx,
+                                              return_state=True)
+            state.update(st2)
+        else:
+            stacked = R.rwkv_channel_mix(bp["cm"], h2, cfg, ctx)
+        if sp:
+            red = hier.tp_reduce_scatter(stacked, ctx, dim=2)
+        else:
+            red = hier.tp_all_reduce(stacked, ctx, scatter_dim=-1)
+        x = x + jax.nn.sigmoid(red[1].astype(jnp.float32)).astype(x.dtype) \
+            * red[0]
+        return x, aux, (state or None)
+
+    h = _gathered(L.apply_norm(x, bp["ln1"], cfg), ctx, sp)
+    attn_out, kv = _attention_with_kv(bp["attn"], h, ap, ctx,
+                                      positions=positions, causal=causal,
+                                      chunk=chunk)
+    if collect_state:
+        state["k"], state["v"] = kv
+    if cfg.family == "hybrid":
+        if collect_state:
+            ssm_out, st = S.ssm_mixer(bp["ssm"], h, cfg, ctx,
+                                      return_state=True)
+            state.update(st)
+        else:
+            ssm_out = S.ssm_mixer(bp["ssm"], h, cfg, ctx)
+        beta = bp["beta"].astype(x.dtype)
+        mix = beta[0] * attn_out + beta[1] * ssm_out
+        x = _residual(x, mix, ctx, sp)
+    else:
+        x = _residual(x, attn_out, ctx, sp)
+
+    if enc_kv is not None:
+        hx = _gathered(L.apply_norm(x, bp["ln_x"], cfg), ctx, sp)
+        xo = L.cross_attention(bp["xattn"], hx, enc_kv[0], enc_kv[1], cfg,
+                               ap.gqa, ctx, ap.q_mask_tbl)
+        x = _residual(x, xo, ctx, sp)
+
+    h2 = L.apply_norm(x, bp["ln2"], cfg)
+    if cfg.is_moe:
+        toks = _moe_tokens(_gathered(h2, ctx, sp) if not sp else h2, ctx, sp)
+        out, aux_l = M.moe_ffn(bp["moe"], toks, cfg, ctx, decode=False)
+        if aux_l is not None:
+            aux = aux + aux_l
+        x = x + _moe_restore(out, ctx, sp)
+    else:
+        h2g = _gathered(h2, ctx, sp)
+        x = _residual(x, L.mlp(bp["mlp"], h2g, cfg), ctx, sp)
+    return x, aux, (state or None)
+
+
+def _attention_with_kv(p, h, ap: ArchPlan, ctx, *, positions, causal, chunk):
+    cfg = ap.cfg
+    q, k, v = L._qkv(p, h, ap.gqa)
+    if cfg.rope_theta > 0:
+        cos, sin = L.rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    mask = L._mask(positions, positions, causal=causal,
+                   window=cfg.sliding_window)
+    o = L.attn_core(q, k, v, mask, ap.gqa.g, chunk=chunk)
+    if ap.q_mask_tbl is not None:
+        o = o * L.take_local(ap.q_mask_tbl, ctx)[None, None, :, None] \
+            .astype(o.dtype)
+    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encoder_forward(params: Params, frames, ap: ArchPlan, ctx: ParallelCtx,
+                    *, sp: bool, scan_layers: bool = True, layer_map=None):
+    """frames: (B, T_enc, D) precomputed frame embeddings (frontend stub)."""
+    cfg = ap.cfg
+    sp = sp and bool(ctx.tp_fast) and frames.shape[1] % max(ap.tp, 1) == 0
+    x = _moe_tokens(frames, ctx, sp=False) if sp else frames
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(x, bp):
+        if layer_map is not None:
+            bp = layer_map(bp)
+        h = _gathered(L.apply_norm(x, bp["ln1"], cfg), ctx, sp)
+        ao, _ = _attention_with_kv(bp["attn"], h, ap, ctx,
+                                   positions=positions, causal=False,
+                                   chunk=0)
+        x = _residual(x, ao, ctx, sp)
+        h2 = _gathered(L.apply_norm(x, bp["ln2"], cfg), ctx, sp)
+        x = _residual(x, L.mlp(bp["mlp"], h2, cfg), ctx, sp)
+        return x
+
+    if scan_layers:
+        x, _ = lax.scan(lambda c, bp: (body(c, bp), None),
+                        x, params["enc_blocks"])
+    else:
+        nl = cfg.enc_layers
+        for i in range(nl):
+            bp = jax.tree.map(lambda t: t[i], params["enc_blocks"])
+            x = body(x, bp)
+    x = L.apply_norm(x, params["enc_norm"], cfg)
+    return _gathered(x, ctx, sp)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence LM forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_lm(params: Params, tokens, ap: ArchPlan, ctx: ParallelCtx, *,
+               sp: bool = False, scan_layers: bool = True,
+               patch_embeds=None, frame_embeds=None,
+               collect_state: bool = False, chunk: int = 0,
+               layer_map=None, enc_layer_map=None, remat: bool = False):
+    """Returns (logits_local, aux_loss, states_or_None, enc_out_or_None).
+
+    logits_local: (B, S[_loc if sp], V_local) vocab-sharded.
+    states: per-layer pytree stacked on a leading layer axis (prefill cache
+    seeds) when ``collect_state``.
+    """
+    cfg = ap.cfg
+    B, Sq = tokens.shape
+    sp_active = sp and bool(ctx.tp_fast)
+    if patch_embeds is None:
+        x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad,
+                           sp=sp_active)
+    else:
+        x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad,
+                           sp=False)
+        x = lax.dynamic_update_slice(
+            x, patch_embeds.astype(x.dtype), (0, 0, 0))
+        if sp_active:
+            x = _moe_tokens(x, ctx, sp=False)  # free slice to seq-shards
+    enc_out = None
+    enc_kv_all = None
+    if cfg.enc_layers:
+        enc_out = encoder_forward(params, frame_embeds, ap, ctx, sp=sp,
+                                  scan_layers=scan_layers,
+                                  layer_map=enc_layer_map)
+        # Precompute per-layer cross K/V once (also the decode cache seed).
+        def xkv(bp):
+            return L.cross_kv(bp["xattn"], enc_out)
+        enc_kv_all = jax.vmap(xkv)(params["blocks"]) if scan_layers else None
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    sp = sp_active
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_in):
+        x, aux = carry
+        bp, ekv = layer_in
+        if layer_map is not None:
+            bp = layer_map(bp)
+        x, a, st = block_forward(bp, x, ap, ctx, positions=positions,
+                                 sp=sp, causal=True, enc_kv=ekv,
+                                 chunk=chunk, collect_state=collect_state)
+        return (x, aux + a), st
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if scan_layers:
+        xs = (params["blocks"],
+              enc_kv_all if cfg.enc_layers else None)
+        (x, aux), states = lax.scan(body, (x, aux0), xs)
+    else:
+        states_list = []
+        aux = aux0
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            ekv = L.cross_kv(bp["xattn"], enc_out) if cfg.enc_layers \
+                else None
+            (x, aux), st = body((x, aux), (bp, ekv))
+            if st is not None:
+                states_list.append(st)
+        states = _stack(states_list) if states_list else None
+
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    if sp and ctx.tp_fast:
+        x = hier.tp_all_gather(x, ctx, dim=1)
+    logits = L.lm_logits(params["embed"], x)
+    return logits, aux, states, enc_out
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def init_cache(ap: ArchPlan, batch: int, s_max: int,
+               local: bool = True, *, kv_quant: bool = False,
+               window_cache: bool = False) -> Params:
+    """Decode cache pytree, leading layer axis.  ``local`` shapes are
+    per-device (tp already divided out); global shapes otherwise.
+
+    kv_quant: int8 K/V payloads + per-(pos, head) bf16 scales.
+    window_cache: ring buffer of size sliding_window (SWA archs only).
+    """
+    cfg = ap.cfg
+    tp = 1 if local else ap.tp
+    c: Params = {}
+    Ldec = cfg.n_layers
+    if window_cache:
+        assert cfg.sliding_window > 0, "window cache needs SWA"
+        s_max = min(s_max, cfg.sliding_window)
+    if not cfg.attn_free:
+        u = ap.gqa.u * tp if not local else ap.gqa.u
+        hd = cfg.head_dim
+        if cfg.family != "ssm":
+            kv_dt = jnp.int8 if kv_quant else cfg.dtype
+            c["k"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
+            c["v"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
+            if kv_quant:
+                c["k_scale"] = jnp.zeros((Ldec, batch, s_max, u),
+                                         jnp.bfloat16)
+                c["v_scale"] = jnp.zeros((Ldec, batch, s_max, u),
+                                         jnp.bfloat16)
+    if cfg.family == "hybrid":
+        ci = ap.d_inner_local if local else cfg.d_inner
+        c["conv"] = jnp.zeros((Ldec, batch, cfg.d_conv - 1, ci), cfg.dtype)
+        c["ssm"] = jnp.zeros((Ldec, batch, ci, cfg.ssm_state), jnp.float32)
+    if cfg.family == "ssm":
+        hloc = ap.rwkv_heads_local if local \
+            else cfg.d_model // cfg.rwkv_head_dim
+        c["shift_tm"] = jnp.zeros((Ldec, batch, cfg.d_model), cfg.dtype)
+        c["shift_cm"] = jnp.zeros((Ldec, batch, cfg.d_model), cfg.dtype)
+        c["wkv"] = jnp.zeros((Ldec, batch, hloc, cfg.rwkv_head_dim,
+                              cfg.rwkv_head_dim), jnp.float32)
+    if cfg.enc_layers:
+        u = ap.gqa.u if local else ap.gqa.kv_slots
+        c["enc_k"] = jnp.zeros((Ldec, batch, cfg.enc_seq, u, cfg.head_dim),
+                               cfg.dtype)
+        c["enc_v"] = jnp.zeros((Ldec, batch, cfg.enc_seq, u, cfg.head_dim),
+                               cfg.dtype)
+    return c
+
+
+def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
+                 ctx: ParallelCtx, *, positions,
+                 attn_chunk=None, kv_ring: bool = False
+                 ) -> Tuple[Any, Params]:
+    """One block, one token.  x: (B,1,D) replicated; cache_l: this layer's
+    cache slice.  Returns (x, new_cache_l).  Every sublayer output is a
+    TP-partial reduced by tp_all_reduce — the collective the paper targets.
+    """
+    cfg = ap.cfg
+    new_c: Params = {}
+    if cfg.family == "ssm":
+        h = L.apply_norm(x, bp["ln1"], cfg)
+        tm, st = R.rwkv_time_mix_step(
+            bp["tm"], h, {"shift_tm": cache_l["shift_tm"],
+                          "wkv": cache_l["wkv"]}, cfg, ctx)
+        new_c["shift_tm"], new_c["wkv"] = st["shift_tm"], st["wkv"]
+        x = x + hier.tp_all_reduce(tm, ctx, scatter_dim=-1)
+        h2 = L.apply_norm(x, bp["ln2"], cfg)
+        stacked, st2 = R.rwkv_channel_mix(
+            bp["cm"], h2, cfg, ctx, state={"shift_cm": cache_l["shift_cm"]},
+            return_state=True)
+        new_c["shift_cm"] = st2["shift_cm"]
+        red = hier.tp_all_reduce(stacked, ctx, scatter_dim=-1)
+        x = x + jax.nn.sigmoid(red[1].astype(jnp.float32)).astype(x.dtype) \
+            * red[0]
+        return x, new_c
+
+    h = L.apply_norm(x, bp["ln1"], cfg)
+    kv_in = {k2: cache_l[k2] for k2 in
+             ("k", "v", "k_scale", "v_scale") if k2 in cache_l}
+    attn_out, kv_new = L.attention_decode(
+        bp["attn"], h, kv_in, cfg, ap.gqa,
+        ctx, positions=positions, q_mask_tbl=ap.q_mask_tbl,
+        chunk=attn_chunk, ring=kv_ring)
+    new_c.update(kv_new)
+    if cfg.family == "hybrid":
+        so, st = S.ssm_step(bp["ssm"], h, {"conv": cache_l["conv"],
+                                           "ssm": cache_l["ssm"]}, cfg, ctx)
+        new_c["conv"], new_c["ssm"] = st["conv"], st["ssm"]
+        beta = bp["beta"].astype(x.dtype)
+        x = x + hier.tp_all_reduce(beta[0] * attn_out + beta[1] * so, ctx,
+                                   scatter_dim=-1)
+    else:
+        x = x + hier.tp_all_reduce(attn_out, ctx, scatter_dim=-1)
+
+    if cfg.enc_layers:
+        hx = L.apply_norm(x, bp["ln_x"], cfg)
+        xo = L.cross_attention(bp["xattn"], hx, cache_l["enc_k"],
+                               cache_l["enc_v"], cfg, ap.gqa, ctx,
+                               ap.q_mask_tbl)
+        x = x + hier.tp_all_reduce(xo, ctx, scatter_dim=-1)
+        new_c["enc_k"], new_c["enc_v"] = cache_l["enc_k"], cache_l["enc_v"]
+
+    h2 = L.apply_norm(x, bp["ln2"], cfg)
+    if cfg.is_moe:
+        out = M.moe_ffn_dense(bp["moe"], h2, cfg, ctx)
+        x = x + hier.tp_all_reduce(out, ctx, scatter_dim=-1)
+    else:
+        x = x + hier.tp_all_reduce(L.mlp(bp["mlp"], h2, cfg), ctx,
+                                   scatter_dim=-1)
+    return x, new_c
+
+
+def decode_step(params: Params, cache: Params, tokens, positions,
+                ap: ArchPlan, ctx: ParallelCtx, *,
+                scan_layers: bool = True, layer_map=None,
+                attn_chunk=None, kv_ring: bool = False):
+    """One decode step for the whole batch.
+
+    tokens: (B,) int32; positions: (B,) write index.  Returns
+    (logits_local (B, V_loc), new_cache).
+    """
+    cfg = ap.cfg
+    x = L.embed_lookup(params["embed"], tokens[:, None], ctx, ap.vocab_pad)
+
+    def body(x, inp):
+        bp, cl = inp
+        if layer_map is not None:
+            bp = layer_map(bp)
+        x, nc = block_decode(bp, x, cl, ap, ctx, positions=positions,
+                             attn_chunk=attn_chunk, kv_ring=kv_ring)
+        return x, nc
+
+    if scan_layers:
+        x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            cl = jax.tree.map(lambda t: t[i], cache)
+            x, nc = body(x, (bp, cl))
+            ncs.append(nc)
+        new_cache = _stack(ncs)
+
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
+__all__ = ["ArchPlan", "make_plan", "init_params", "init_cache",
+           "forward_lm", "decode_step", "block_forward", "block_decode",
+           "encoder_forward"]

@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules, step builders, pipeline parallelism."""
+from .sharding import (param_specs, param_fsdp_dims, cache_spec, data_specs,
+                       gather_params, TP_RULES)
+
+__all__ = ["param_specs", "param_fsdp_dims", "cache_spec", "data_specs",
+           "gather_params", "TP_RULES"]

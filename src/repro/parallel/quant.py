@@ -1,0 +1,71 @@
+"""Weight quantization for serving (beyond-paper optimization).
+
+Block weights are stored as int8 with per-output-channel bf16 scales and
+dequantized per layer inside the decode/prefill scan via the same
+``layer_map`` hook used for FSDP gathering.  Each original leaf ``w``
+becomes ``{"q": int8 w, "s": bf16 scale}``; the sharding rules resolve the
+rule name one path level up, and the size-1 scale dims fall out of TP/FSDP
+sharding automatically (divisibility check).
+
+Halves the dominant weight-streaming term of big-model decode (§Perf cell
+A8) at ~0.4 % per-channel quantization error; embeddings and norms stay
+bf16 (small, accuracy-sensitive).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# leaves that stay un-quantized (tiny and/or accuracy-critical)
+_SKIP = {"w", "b", "mu", "beta", "u", "w0", "ln_w", "ln_b", "dt_bias",
+         "A_log", "D_skip", "conv_b", "router", "bq", "bk", "bv", "b1"}
+
+
+def _is_qs(node) -> bool:
+    return isinstance(node, dict) and set(node) == {"q", "s"}
+
+
+def quantize_blocks(blocks: Dict[str, Any]) -> Dict[str, Any]:
+    """Quantize a (stacked) block-param tree: w -> {'q','s'}."""
+    from jax.tree_util import tree_map_with_path, DictKey
+
+    def f(path, leaf):
+        name = path[-1].key if isinstance(path[-1], DictKey) else str(path[-1])
+        if name in _SKIP or leaf.dtype not in (jnp.bfloat16, jnp.float32) \
+                or leaf.ndim < 3:
+            return leaf
+        # per-output-channel scale: reduce all dims except (layer, last)
+        red = tuple(range(1, leaf.ndim - 1))
+        lf = leaf.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(lf), axis=red, keepdims=True)
+                        / 127.0, 1e-30)
+        q = jnp.clip(jnp.round(lf / s), -127, 127).astype(jnp.int8)
+        return {"q": q, "s": s.astype(jnp.bfloat16)}
+
+    return tree_map_with_path(f, blocks)
+
+
+def dequant_layer(bp):
+    """Per-layer dequant (inside the scan): {'q','s'} -> bf16 leaf."""
+    def f(node):
+        if _is_qs(node):
+            return (node["q"].astype(jnp.float32)
+                    * node["s"].astype(jnp.float32)).astype(jnp.bfloat16)
+        return node
+
+    return jax.tree.map(f, bp, is_leaf=lambda n: _is_qs(n) or not
+                        isinstance(n, dict))
+
+
+def quantize_params(params: Dict[str, Any]) -> Dict[str, Any]:
+    out = dict(params)
+    for k in ("blocks", "enc_blocks"):
+        if k in params:
+            out[k] = quantize_blocks(params[k])
+    return out
+
+
+__all__ = ["quantize_params", "quantize_blocks", "dequant_layer"]

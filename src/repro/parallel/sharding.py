@@ -1,0 +1,214 @@
+"""Sharding rules: parameter/cache/data PartitionSpecs for the production
+meshes, plus the per-layer FSDP gather used inside scanned step functions.
+
+Rules are name-based on the leaf path.  Every rule gives the *TP* dimension
+assignment; the FSDP dimension is then chosen automatically as the largest
+remaining dimension divisible by the FSDP-axes size (small or indivisible
+leaves stay replicated across FSDP — they are negligible).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey
+
+from ..core.pcontext import ParallelCtx
+
+# ---------------------------------------------------------------------------
+# TP rules: leaf name -> which dim (counted from the *end*, ignoring the
+# leading stacked-layer dim) is TP-sharded.  None = replicated over TP.
+# ---------------------------------------------------------------------------
+# Attention slot layouts: wq/wk/wv (D, slots, hd) -> slot dim = -2;
+# wo (slots, hd, D) -> -3.  Biases (slots, hd) -> -2.
+TP_RULES: Dict[str, Optional[int]] = {
+    # embedding: tok (V, D) shard vocab; head (D, V) shard vocab
+    "tok": -2, "head": -1,
+    # attention
+    "wq": -2, "wk": -2, "wv": -2, "wo": -3,
+    "bq": -2, "bk": -2, "bv": -2,
+    # dense mlp: wg/wu/w1 (D,F) col; wd/w2 (F,D) row; b1 (F,)
+    "wg": -1, "wu": -1, "w1": -1, "b1": -1, "wd": -2, "w2": -2,
+    # norms replicated
+    "w": None, "b": None,
+    # moe: router replicated; experts (E, ...) shard expert dim
+    "router": None,
+    # NOTE: moe expert wg/wu/wd are (E,D,F)/(E,F,D): expert dim = -3
+    # handled by path context below (under a "moe" parent).
+    # ssm (mamba): d_inner-sharded leaves
+    "w_x": -1, "w_z": -1, "w_dt": -1, "dt_bias": -1,
+    "conv_w": -1, "conv_b": -1, "A_log": -2, "D_skip": -1,
+    "w_out": -2, "w_bc": None,
+    # rwkv time-mix: A(-heads)-sharded
+    "w_r": -1, "w_k": -1, "w_v": -1, "w_g": -1, "w0": -1, "u": -1,
+    "ln_w": -1, "ln_b": -1, "w_a": None, "w_b": -1, "w_o": -2,
+    "mu": None, "beta": None,
+    # rwkv channel-mix (under "cm"): wk (D,F) col, wv (F,D) row, wr (D,D) row
+    "wr": -2,
+}
+
+_MOE_EXPERT_LEAVES = {"wg", "wu", "wd"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _tp_dim(path_names: Tuple[str, ...], ndim: int) -> Optional[int]:
+    name = path_names[-1]
+    parents = path_names[:-1]
+    if name in ("q", "s") and len(path_names) >= 2:
+        # quantized leaf {'q','s'}: rule name is one level up; scale dims of
+        # size 1 drop out of sharding via the divisibility check
+        name = path_names[-2]
+        parents = path_names[:-2]
+    if "moe" in parents and name in _MOE_EXPERT_LEAVES:
+        return ndim - 3  # expert dim of (E, D, F)/(E, F, D) [+L if stacked]
+    if "cm" in parents:  # rwkv channel-mix: wk (D,F) col / wv (F,D) row
+        d = {"wk": -1, "wv": -2, "wr": -2, "mu": None}[name]
+        return None if d is None else ndim + d
+    if name not in TP_RULES:
+        raise KeyError(f"no TP rule for param {'/'.join(path_names)}")
+    d = TP_RULES[name]
+    return None if d is None else ndim + d
+
+
+def _axes_prod(mesh_axis_sizes: Dict[str, int], axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh_axis_sizes[a]
+    return n
+
+
+def _leaf_plan(path_names, shape, ctx: ParallelCtx,
+               mesh_axis_sizes: Dict[str, int], fsdp: bool,
+               stacked: bool):
+    """Returns (PartitionSpec, fsdp_dim or None)."""
+    ndim = len(shape)
+    spec = [None] * ndim
+    tp_axes = ctx.tp_slow + ctx.tp_fast
+    tpd = _tp_dim(path_names, ndim)
+    if tpd is not None and tp_axes:
+        tp_size = _axes_prod(mesh_axis_sizes, tp_axes)
+        if shape[tpd] % tp_size == 0:
+            spec[tpd] = tp_axes if len(tp_axes) > 1 else tp_axes[0]
+        else:
+            tpd = None
+    fsdp_dim = None
+    # Cross-attention weights stay FSDP-replicated: their K/V are precomputed
+    # once per generation over *stacked* layers (vmapped), which cannot nest
+    # a per-layer all-gather.  They are a small fraction of enc-dec models.
+    if "xattn" in path_names:
+        fsdp = False
+    if fsdp and ctx.fsdp:
+        fs = _axes_prod(mesh_axis_sizes, ctx.fsdp)
+        first = 1 if stacked else 0  # never shard the stacked-layer dim
+        cands = [d for d in range(first, ndim)
+                 if d != tpd and spec[d] is None and shape[d] % fs == 0
+                 and shape[d] // fs >= 8]
+        if cands:
+            fsdp_dim = max(cands, key=lambda d: shape[d])
+            spec[fsdp_dim] = ctx.fsdp if len(ctx.fsdp) > 1 else ctx.fsdp[0]
+    return P(*spec), fsdp_dim
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def param_specs(params, ctx: ParallelCtx, mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree for a parameter pytree.
+
+    Leaves under 'blocks'/'enc_blocks' have a leading stacked-layer dim.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        stacked = "blocks" in names or "enc_blocks" in names
+        spec, _ = _leaf_plan(names, leaf.shape, ctx, sizes, fsdp, stacked)
+        return spec
+
+    return tree_map_with_path(f, params)
+
+
+def param_fsdp_dims(params, ctx: ParallelCtx, mesh):
+    """Pytree of ints: the dim each leaf is FSDP-sharded along, *relative to
+    the per-layer slice* (stacked-layer dim stripped); -1 = not sharded.
+    (-1 rather than None so the tree structure matches the param tree.)"""
+    sizes = _mesh_axis_sizes(mesh)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        stacked = "blocks" in names or "enc_blocks" in names
+        _, fd = _leaf_plan(names, leaf.shape, ctx, sizes, True, stacked)
+        if fd is None:
+            return -1
+        return fd - 1 if stacked else fd
+
+    return tree_map_with_path(f, params)
+
+
+def gather_params(layer_params, fsdp_dims, ctx: ParallelCtx):
+    """All-gather FSDP-sharded leaves of one layer's params (inside
+    shard_map).  AD transposes this into the gradient reduce-scatter."""
+    if not ctx.fsdp:
+        return layer_params
+
+    def g(leaf, dim):
+        if dim < 0:
+            return leaf
+        return lax.all_gather(leaf, ctx.fsdp, axis=dim, tiled=True)
+
+    return jax.tree.map(g, layer_params, fsdp_dims)
+
+
+# ---------------------------------------------------------------------------
+# Cache and data specs
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cache, ctx: ParallelCtx):
+    """Decode-cache specs: batch over dp axes, head/channel dims over TP."""
+    tp = ctx.tp_slow + ctx.tp_fast
+    tp_s = tp if len(tp) > 1 else (tp[0] if tp else None)
+    dp = ctx.dp if len(ctx.dp) > 1 else (ctx.dp[0] if ctx.dp else None)
+
+    def f(path, leaf):
+        name = _path_names(path)[-1]
+        nd = leaf.ndim
+        if name in ("k", "v", "enc_k", "enc_v"):   # (L,B,S,U,hd)
+            return P(None, dp, None, tp_s, None)
+        if name in ("k_scale", "v_scale"):          # (L,B,S,U)
+            return P(None, dp, None, tp_s)
+        if name == "conv":                          # (L,B,K-1,Ci)
+            return P(None, dp, None, tp_s)
+        if name == "ssm":                           # (L,B,Ci,s)
+            return P(None, dp, tp_s, None)
+        if name in ("shift_tm", "shift_cm"):        # (L,B,D) replicated D
+            return P(None, dp, None)
+        if name == "wkv":                           # (L,B,H,hd,hd)
+            return P(None, dp, tp_s, None, None)
+        raise KeyError(f"no cache rule for {name} ndim={nd}")
+
+    return tree_map_with_path(f, cache)
+
+
+def data_specs(ctx: ParallelCtx, *, ndim: int = 2):
+    """Spec for (B, S[, D]) batch inputs: batch over dp axes."""
+    dp = ctx.dp if len(ctx.dp) > 1 else (ctx.dp[0] if ctx.dp else None)
+    return P(*((dp,) + (None,) * (ndim - 1)))
+
+
+__all__ = ["param_specs", "param_fsdp_dims", "gather_params", "cache_spec",
+           "data_specs", "TP_RULES"]

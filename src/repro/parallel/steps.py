@@ -1,0 +1,370 @@
+"""Step builders: shard_map'd train / prefill / decode step functions.
+
+These close over an :class:`ArchPlan`, a :class:`ParallelCtx` and a mesh, and
+return jit-ready functions together with their in/out shardings — consumed by
+the launcher, the dry-run, the inference engine and the tests alike.
+
+Training step = FSDP(all-gather weights per layer) x TP x SP x grad-accum
+microbatches x remat, with the cross-pod gradient reduction performed by the
+paper's recursive-doubling strategy (optionally int8-compressed).
+
+Decode step = Megatron-style TP with the per-layer all-reduce strategy under
+study (flat | hier_ring | hier_rd | hier_rd_halving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from ..core.pcontext import ParallelCtx
+from ..core import hierarchical as hier
+from ..models.transformer import (ArchPlan, forward_lm, decode_step,
+                                  init_cache)
+from ..models import layers as L
+from ..training.optimizer import (adamw_init, adamw_update, cosine_lr,
+                                  global_grad_norm)
+from . import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _all_axes(ctx: ParallelCtx):
+    seen, out = set(), []
+    for a in ctx.tp_slow + ctx.tp_fast + ctx.dp + ctx.fsdp:
+        if a not in seen:
+            seen.add(a)
+            out.append(a)
+    return tuple(out)
+
+
+def _repl_factors(params, specs, mesh):
+    """How many devices hold each leaf's shard (for norm accounting)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod(mesh.devices.shape))
+
+    def f(_, spec):
+        shard_ways = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shard_ways *= sizes[a]
+        return total // shard_ways
+
+    return jax.tree.map(f, params, specs)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Callable            # the jit-able python callable (shard_map'd)
+    in_specs: Any
+    out_specs: Any
+    mesh: Any
+    ctx: ParallelCtx
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self, **kw):
+        kw.setdefault("donate_argnums", self.donate_argnums)
+        return jax.jit(self.fn, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                     microbatches: int = 1, scan_layers: bool = True,
+                     remat: bool = True, sp: bool = True,
+                     base_lr: float = 3e-4, warmup: int = 100,
+                     total_steps: int = 10000, clip_norm: float = 1.0,
+                     frame_embeds: bool = False, patch_embeds: bool = False
+                     ) -> BuiltStep:
+    cfg = ap.cfg
+    sp = sp and cfg.family not in ("ssm", "hybrid")  # recurrences need full seq
+    pod_axes = tuple(a for a in ctx.dp if a not in ctx.fsdp)
+
+    # All specs are computed from a ShapeDtypeStruct template — no arrays
+    # are materialized here.
+    from ..models.transformer import init_params  # local import
+
+    template = jax.eval_shape(lambda k: init_params(k, ap),
+                              jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(template, ctx, mesh, fsdp=True)
+    fdims = shd.param_fsdp_dims(template, ctx, mesh)
+    repl = _repl_factors(template, pspecs, mesh)
+    all_axes = _all_axes(ctx)
+
+    fdims_blocks = fdims["blocks"]
+    layer_map = (lambda bp: shd.gather_params(bp, fdims_blocks, ctx)) \
+        if ctx.fsdp else None
+    enc_layer_map = None
+    if ctx.fsdp and "enc_blocks" in fdims:
+        fdims_enc = fdims["enc_blocks"]
+        enc_layer_map = lambda bp: shd.gather_params(bp, fdims_enc, ctx)
+
+    def loss_fn(params, tokens, labels, extra):
+        logits, aux, _, _ = forward_lm(
+            params, tokens, ap, ctx, sp=sp, scan_layers=scan_layers,
+            layer_map=layer_map, enc_layer_map=enc_layer_map, remat=remat,
+            frame_embeds=extra.get("frames"),
+            patch_embeds=extra.get("patches"))
+        # data pipeline provides labels already shifted/aligned per position
+        loss = L.sharded_xent(logits, labels, ctx, ap.vocab_pad,
+                              cfg.vocab_size)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * hier.dp_psum_mean(aux, ctx)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        # Gather non-block params once (embed / final norms).
+        def full_params(p):
+            if not ctx.fsdp:
+                return p
+            out = dict(p)
+            for k in p:
+                if k in ("blocks", "enc_blocks"):
+                    continue
+                out[k] = shd.gather_params(p[k], fdims[k], ctx)
+            return out
+
+        tokens, labels = batch["tokens"], batch["labels"]
+        B_loc = tokens.shape[0]
+        mb = microbatches
+        assert B_loc % mb == 0, (B_loc, mb)
+        tok_mb = tokens.reshape(mb, B_loc // mb, -1)
+        lab_mb = labels.reshape(mb, B_loc // mb, -1)
+        extras = {}
+        for k2, name in (("frames", "frames"), ("patches", "patches")):
+            if name in batch:
+                e = batch[name]
+                extras[k2] = e.reshape((mb, B_loc // mb) + e.shape[1:])
+
+        def micro(grads_acc, xs):
+            tok, lab = xs[0], xs[1]
+            extra = {}
+            i = 2
+            if "frames" in extras:
+                extra["frames"] = xs[i]; i += 1
+            if "patches" in extras:
+                extra["patches"] = xs[i]; i += 1
+            l, g = jax.value_and_grad(
+                lambda p: loss_fn(full_params(p), tok, lab, extra))(params)
+            grads_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), grads_acc, g)
+            return grads_acc, l
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (tok_mb, lab_mb)
+        if "frames" in extras:
+            xs = xs + (extras["frames"],)
+        if "patches" in extras:
+            xs = xs + (extras["patches"],)
+        grads, losses = lax.scan(micro, g0, xs)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        loss = jnp.mean(losses)
+
+        # Cross-pod / replicated-leaf gradient reduction (paper technique).
+        # FSDP-gathered leaves (fd >= 0) are already reduce-scattered over
+        # ctx.fsdp by AD; only the pod (slow-DCN) sum remains — the paper's
+        # inter-node recursive-doubling phase.  Leaves replicated across
+        # FSDP still need the sum over every dp axis.
+        def finish(g, fd):
+            if fd >= 0:
+                return hier.grad_cross_pod_reduce(g, ctx, pod_axes) \
+                    if pod_axes else g
+            fast_dp = tuple(a for a in ctx.dp if a not in pod_axes)
+            if fast_dp:
+                g = lax.psum(g, fast_dp)
+            return hier.grad_cross_pod_reduce(g, ctx, pod_axes) \
+                if pod_axes else g
+
+        grads = jax.tree.map(finish, grads, fdims)
+        gnorm = global_grad_norm(grads, repl, all_axes)
+        skip = ~jnp.isfinite(gnorm)
+        scale = jnp.where(gnorm > clip_norm, clip_norm / (gnorm + 1e-9), 1.0)
+        lr = cosine_lr(opt_state["step"], base_lr=base_lr, warmup=warmup,
+                       total=total_steps)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr,
+                                           grad_scale=scale, skip=skip)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "skipped": skip.astype(jnp.float32), "lr": lr}
+        return new_params, new_opt, metrics
+
+    data_spec = {"tokens": shd.data_specs(ctx, ndim=2),
+                 "labels": shd.data_specs(ctx, ndim=2)}
+    if frame_embeds:
+        data_spec["frames"] = shd.data_specs(ctx, ndim=3)
+    if patch_embeds:
+        data_spec["patches"] = shd.data_specs(ctx, ndim=3)
+    opt_spec = {"m": pspecs, "v": pspecs, "step": P()}
+    in_specs = (pspecs, opt_spec, data_spec)
+    out_specs = (pspecs, opt_spec,
+                 {"loss": P(), "grad_norm": P(), "skipped": P(), "lr": P()})
+    fn = shard_map(train_step, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=ctx, donate_argnums=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def build_decode_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                      scan_layers: bool = True, fsdp_serve: bool = False,
+                      sample: bool = True, attn_chunk=None,
+                      kv_quant: bool = False, weight_quant: bool = False,
+                      window_cache: bool = False) -> BuiltStep:
+    """One-token decode across the batch: (params, cache, tokens, positions)
+    -> (next_tokens | logits, new_cache)."""
+    cfg = ap.cfg
+    from ..models.transformer import init_params
+
+    serve_ctx = ctx if fsdp_serve else ctx.replace(fsdp=())
+    template = jax.eval_shape(lambda k: init_params(k, ap),
+                              jax.random.PRNGKey(0))
+    if weight_quant:
+        from .quant import quantize_params, dequant_layer
+        template = jax.eval_shape(quantize_params, template)
+    pspecs = shd.param_specs(template, serve_ctx, mesh, fsdp=fsdp_serve)
+    fdims = shd.param_fsdp_dims(template, serve_ctx, mesh) if fsdp_serve \
+        else None
+    layer_map = None
+    if fsdp_serve:
+        layer_map = lambda bp: shd.gather_params(bp, fdims["blocks"],
+                                                 serve_ctx)
+    if weight_quant:
+        from .quant import dequant_layer
+        _g = layer_map
+        layer_map = (lambda bp: dequant_layer(_g(bp))) if _g \
+            else dequant_layer
+
+    def step(params, cache, tokens, positions):
+        if fsdp_serve:
+            full = dict(params)
+            for k in params:
+                if k not in ("blocks", "enc_blocks"):
+                    full[k] = shd.gather_params(params[k], fdims[k],
+                                                serve_ctx)
+            params = full
+        logits, new_cache = decode_step(params, cache, tokens, positions,
+                                        ap, serve_ctx,
+                                        scan_layers=scan_layers,
+                                        layer_map=layer_map,
+                                        attn_chunk=attn_chunk,
+                                        kv_ring=window_cache)
+        if sample:
+            out = L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
+        else:
+            out = lax.all_gather(logits, serve_ctx.tp_axes, axis=1,
+                                 tiled=True) if serve_ctx.has_tp else logits
+        return out, new_cache
+
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, 1, 8, local=False, kv_quant=kv_quant,
+        window_cache=window_cache))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    dp = serve_ctx.dp
+    dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    in_specs = (pspecs, cspecs, P(dspec), P(dspec))
+    out_specs = (P(dspec) if sample else P(dspec, None), cspecs)
+    fn = shard_map(step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx, donate_argnums=(1,))
+
+
+def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                  scan_layers: bool = True, s_max: int,
+                  fsdp_serve: bool = False, attn_chunk=None,
+                  sp: bool = False,
+                  frame_embeds: bool = False, patch_embeds: bool = False
+                  ) -> BuiltStep:
+    """Prefill: run the full prompt, return (first_token, cache)."""
+    cfg = ap.cfg
+    from ..models.transformer import init_params
+
+    serve_ctx = ctx if fsdp_serve else ctx.replace(fsdp=())
+    template = jax.eval_shape(lambda k: init_params(k, ap),
+                              jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(template, serve_ctx, mesh, fsdp=fsdp_serve)
+    fdims = shd.param_fsdp_dims(template, serve_ctx, mesh) if fsdp_serve \
+        else None
+    layer_map = (lambda bp: shd.gather_params(bp, fdims["blocks"], serve_ctx)) \
+        if fsdp_serve else None
+
+    def prefill(params, tokens, *extra):
+        if fsdp_serve:
+            full = dict(params)
+            for k in params:
+                if k not in ("blocks", "enc_blocks"):
+                    full[k] = shd.gather_params(params[k], fdims[k],
+                                                serve_ctx)
+            params = full
+        kw = {}
+        i = 0
+        if frame_embeds:
+            kw["frame_embeds"] = extra[i]; i += 1
+        if patch_embeds:
+            kw["patch_embeds"] = extra[i]; i += 1
+        B, S = tokens.shape
+        chunk = attn_chunk if attn_chunk is not None \
+            else (1024 if S > 8192 else 0)
+        logits, _, states, enc_out = forward_lm(
+            params, tokens, ap, serve_ctx, sp=sp,
+            scan_layers=scan_layers, collect_state=True,
+            layer_map=layer_map, chunk=chunk, **kw)
+        cache = init_cache(ap, B, s_max, local=True)
+        # seed the cache from prefill states
+        if "k" in cache:
+            cache["k"] = lax.dynamic_update_slice(
+                cache["k"], states["k"].astype(cache["k"].dtype),
+                (0, 0, 0, 0, 0))
+            cache["v"] = lax.dynamic_update_slice(
+                cache["v"], states["v"].astype(cache["v"].dtype),
+                (0, 0, 0, 0, 0))
+        for nm in ("conv", "ssm", "shift_tm", "shift_cm", "wkv"):
+            if nm in cache:
+                cache[nm] = states[nm].astype(cache[nm].dtype)
+        if cfg.enc_layers:
+            def xkv(bp):
+                # xattn is never FSDP-sharded (see sharding._leaf_plan)
+                return L.cross_kv(bp["xattn"], enc_out)
+            ek, ev = jax.vmap(xkv)(params["blocks"])
+            cache["enc_k"] = ek.astype(cache["enc_k"].dtype)
+            cache["enc_v"] = ev.astype(cache["enc_v"].dtype)
+        nxt = L.greedy_sample(logits[:, -1], serve_ctx, cfg.vocab_size)
+        return nxt, cache
+
+    cache_t = jax.eval_shape(lambda: init_cache(ap, 1, 8, local=False))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    dp = serve_ctx.dp
+    dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    in_sp = [pspecs, P(dspec, None)]
+    if frame_embeds:
+        in_sp.append(P(dspec, None, None))
+    if patch_embeds:
+        in_sp.append(P(dspec, None, None))
+    in_specs = tuple(in_sp)
+    out_specs = (P(dspec), cspecs)
+    fn = shard_map(prefill, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx)
+
+
+__all__ = ["build_train_step", "build_decode_step", "build_prefill",
+           "BuiltStep"]

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, fault
+tolerance."""
+from .optimizer import (adamw_init, adamw_update, cosine_lr,
+                        global_grad_norm)
+
+__all__ = ["adamw_init", "adamw_update", "cosine_lr", "global_grad_norm"]

@@ -1,0 +1,35 @@
+"""Test configuration.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+single real CPU device.  Multi-device tests run in subprocesses (see
+tests/dist_cases/) with --xla_force_host_platform_device_count set there.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_dist_case(script_name: str, n_devices: int = 8,
+                  timeout: int = 900) -> str:
+    """Run a tests/dist_cases/<script> in a subprocess with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    path = os.path.join(REPO, "tests", "dist_cases", script_name)
+    proc = subprocess.run([sys.executable, path], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{script_name} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def dist_runner():
+    return run_dist_case

@@ -1,0 +1,88 @@
+"""Tests for the alpha-beta communication models (paper Eqs. 1-6)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm_model as cm
+
+KB = 1024
+
+
+def test_ring_latency_linear_in_devices():
+    t8 = cm.t_ring_allreduce(256 * KB, 2, 4, cm.PERLMUTTER)
+    t32 = cm.t_ring_allreduce(256 * KB, 8, 4, cm.PERLMUTTER)
+    # latency term: 2(NG-1) alpha — grows ~linearly with device count
+    assert t32 > 3.0 * t8 * (31 / 7) / 5  # loose linear-growth check
+    assert t32 > t8
+
+
+def test_tree_latency_log_in_nodes():
+    t2 = cm.t_tree_allreduce(256 * KB, 2, 4, cm.PERLMUTTER)
+    t16 = cm.t_tree_allreduce(256 * KB, 16, 4, cm.PERLMUTTER)
+    # alpha_inter term scales with log2(N): 1 -> 4
+    lat2 = 2 * math.log2(2) * cm.PERLMUTTER.alpha_inter
+    lat16 = 2 * math.log2(16) * cm.PERLMUTTER.alpha_inter
+    assert (t16 - t2) == pytest.approx(
+        (lat16 - lat2)
+        + 2 * (15 / 16 - 1 / 2) * 256 * KB / cm.PERLMUTTER.beta_inter,
+        rel=1e-6)
+
+
+def test_nvrar_beats_ring_and_tree_small_messages():
+    """The paper's core claim: in the 128 KB - 2 MB regime across >= 4 nodes,
+    NVRAR has lower modelled latency than both NCCL algorithms."""
+    for msg in (128 * KB, 256 * KB, 512 * KB, 1024 * KB, 2048 * KB):
+        for n_nodes in (4, 8, 16, 32):
+            nv = cm.t_nvrar(msg, n_nodes, 4, cm.PERLMUTTER)
+            ring = cm.t_ring_allreduce(msg, n_nodes, 4, cm.PERLMUTTER)
+            tree = cm.t_tree_allreduce(msg, n_nodes, 4, cm.PERLMUTTER)
+            assert nv < ring, (msg, n_nodes)
+            assert nv < tree, (msg, n_nodes)
+
+
+def test_nvrar_speedup_band_matches_paper():
+    """Paper: up to 1.9x on Slingshot and 3.5x on InfiniBand for
+    256 KB-2 MB.  The idealized alpha-beta model lands in the Slingshot band
+    and predicts the IB ceiling of exactly 2x vs an *ideal* tree (G=1 makes
+    NVRAR pure RD with half of tree's latency+bandwidth terms); the paper's
+    larger measured IB gains are against real NCCL software overheads not in
+    the model — see EXPERIMENTS.md §Paper-claims."""
+    perl = max(cm.nvrar_speedup(m, n, 4, cm.PERLMUTTER)
+               for m in (256 * KB, 512 * KB, 1024 * KB, 2048 * KB)
+               for n in (4, 8, 16, 32))
+    vista = max(cm.nvrar_speedup(m, n, 1, cm.VISTA)
+                for m in (256 * KB, 512 * KB, 1024 * KB, 2048 * KB)
+                for n in (4, 8, 16, 32))
+    assert 1.8 <= perl <= 4.0, perl
+    assert 1.9 <= vista <= 2.1, vista
+
+
+def test_decode_message_size_example():
+    # 70B model, B=8, H=8192 -> 128 KB (paper Sec. 3.5)
+    assert cm.decode_allreduce_bytes(8, 8192) == 128 * KB
+
+
+@given(msg=st.integers(16 * KB, 8 * 1024 * KB),
+       n_nodes=st.sampled_from([2, 4, 8, 16, 32]),
+       g=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=200, deadline=None)
+def test_nvrar_model_properties(msg, n_nodes, g):
+    net = cm.PERLMUTTER
+    nv = cm.t_nvrar(msg, n_nodes, g, net)
+    assert nv > 0
+    # monotone in message size
+    assert cm.t_nvrar(2 * msg, n_nodes, g, net) > nv
+    # halving variant never beats paper model on latency-dominated sizes by
+    # more than its bandwidth advantage; both positive
+    assert cm.t_nvrar_variant(msg, n_nodes, g, net, inter="halving") > 0
+    # full-exchange variant >= paper's optimistic Eq. 4 form
+    assert cm.t_nvrar_variant(msg, n_nodes, g, net,
+                              inter="full_exchange") >= nv - 1e-12
+
+
+def test_speedup_table_shape():
+    rows = cm.speedup_table(cm.PERLMUTTER, [256 * KB, 1024 * KB],
+                            [8, 16, 32])
+    assert len(rows) == 6
+    assert all(r["speedup"] > 0 for r in rows)

@@ -1,0 +1,27 @@
+"""Multi-device (8 simulated host devices) system tests, run in
+subprocesses so the main pytest process keeps its single-device view."""
+import pytest
+
+
+@pytest.mark.dist
+def test_collective_strategies(dist_runner):
+    out = dist_runner("case_collectives.py")
+    assert "collectives OK" in out
+
+
+@pytest.mark.dist
+def test_decode_parity(dist_runner):
+    out = dist_runner("case_decode_parity.py")
+    assert "decode parity OK" in out
+
+
+@pytest.mark.dist
+def test_train_parity(dist_runner):
+    out = dist_runner("case_train_parity.py")
+    assert "train parity OK" in out
+
+
+@pytest.mark.dist
+def test_elastic_restart(dist_runner):
+    out = dist_runner("case_elastic.py")
+    assert "elastic OK" in out

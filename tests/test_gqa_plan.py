@@ -1,0 +1,69 @@
+"""Property tests for the GQA head-padding planner (universal TP
+shardability)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import plan_gqa
+from repro.configs import ARCH_IDS, get_config
+
+
+def _check_plan(plan, n_q, n_kv, tp):
+    q_map = np.asarray(plan.q_map).reshape(tp, plan.u, plan.g)
+    kv_map = np.asarray(plan.kv_map).reshape(tp, plan.u)
+    # every live q head appears exactly once
+    live = q_map[q_map >= 0]
+    assert sorted(live.tolist()) == list(range(n_q))
+    # group consistency: every live q slot's kv slot holds its original kv
+    q_per_kv = n_q // n_kv
+    for d in range(tp):
+        for u in range(plan.u):
+            for g in range(plan.g):
+                q = q_map[d, u, g]
+                if q >= 0:
+                    assert kv_map[d, u] == q // q_per_kv, (d, u, g)
+    # dead kv slots serve no live q heads
+    for d in range(tp):
+        for u in range(plan.u):
+            if kv_map[d, u] < 0:
+                assert (q_map[d, u] < 0).all()
+    assert plan.flops_overhead >= 1.0
+    assert plan.q_slots % tp == 0 and plan.kv_slots % tp == 0
+
+
+@given(st.integers(1, 16), st.integers(1, 8), st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=300, deadline=None)
+def test_plan_random(q_per_kv, n_kv, tp):
+    n_q = q_per_kv * n_kv
+    plan = plan_gqa(n_q, n_kv, tp)
+    _check_plan(plan, n_q, n_kv, tp)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("tp", [8, 16, 256])
+def test_plan_assigned_archs(arch, tp):
+    cfg = get_config(arch)
+    if cfg.attn_free:
+        pytest.skip("attention-free")
+    plan = plan_gqa(cfg.n_heads, cfg.n_kv_heads, tp)
+    _check_plan(plan, cfg.n_heads, cfg.n_kv_heads, tp)
+    # padding overhead stays sane for the production TP=16
+    if tp == 16:
+        assert plan.flops_overhead <= 1.5, (arch, plan.flops_overhead)
+
+
+def test_no_padding_when_divisible():
+    plan = plan_gqa(96, 8, 16)  # mistral-large
+    assert plan.flops_overhead == 1.0
+    plan = plan_gqa(32, 8, 16)  # llama3.2 / pixtral
+    assert plan.flops_overhead == 1.0
+
+
+def test_hymba_case():
+    plan = plan_gqa(25, 5, 16)
+    assert plan.q_slots == 32 and plan.flops_overhead == pytest.approx(1.28)
+
+
+def test_qwen15_mha_case():
+    plan = plan_gqa(40, 40, 16)
+    assert plan.q_slots == 48  # 20% dead-slot overhead, mapping identity

@@ -1,0 +1,65 @@
+"""Property tests on the hierarchical-collective schedule mathematics
+(device-free: the schedule invariants the shard_map code relies on)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64, 128, 256]))
+@settings(deadline=None)
+def test_xor_schedule_is_perfect_matching_each_step(n):
+    """Recursive doubling step i: peer = rank ^ 2^i is an involution with
+    no fixed points — every device exchanges with exactly one other."""
+    step = 1
+    while step < n:
+        peers = np.arange(n) ^ step
+        assert np.all(peers != np.arange(n))
+        assert np.array_equal(peers[peers], np.arange(n))
+        step <<= 1
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64]))
+@settings(deadline=None)
+def test_rd_converges_to_full_sum(n):
+    """Simulate the RD dataflow on scalars: after log2(n) XOR exchanges,
+    every rank holds the global sum."""
+    rng = np.random.default_rng(n)
+    vals = rng.standard_normal(n)
+    acc = vals.copy()
+    step = 1
+    while step < n:
+        acc = acc + acc[np.arange(n) ^ step]
+        step <<= 1
+    np.testing.assert_allclose(acc, np.full(n, vals.sum()), rtol=1e-9)
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32]))
+@settings(deadline=None)
+def test_halving_schedule_slice_tracking(n):
+    """Recursive halving: the kept-half bit-walk leaves rank r holding
+    logical chunk r (the invariant rd_halving_all_reduce's AG phase relies
+    on)."""
+    for r in range(n):
+        lo, size, stride = 0, n, n >> 1
+        while size > 1:
+            half = size // 2
+            if (r // stride) % 2:
+                lo += half
+            size, stride = half, stride >> 1
+        assert lo == r
+
+
+@given(st.integers(1, 4096), st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_int8_group_quantization_error_bound(nelem, seed):
+    """The compressed-exchange quantizer: error <= group_absmax / 127 per
+    element (half a quantization step would be /254; rounding gives /127
+    worst case -> use that bound)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(nelem) * rng.uniform(0.1, 100)
+    group = 128
+    pad = (-nelem) % group
+    xp = np.pad(x, (0, pad)).reshape(-1, group)
+    scale = np.maximum(np.abs(xp).max(1, keepdims=True) / 127.0, 1e-30)
+    q = np.clip(np.round(xp / scale), -127, 127)
+    err = np.abs(q * scale - xp)
+    assert np.all(err <= scale * 0.5 + 1e-12)

@@ -1,0 +1,52 @@
+"""Unit tests for the serving-quantization module (int8 weights)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.transformer import make_plan, init_params
+from repro.parallel.quant import quantize_params, quantize_blocks, dequant_layer
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    return init_params(jax.random.PRNGKey(0), ap)
+
+
+def test_quantize_roundtrip_error_bound(params):
+    q = quantize_params(params)
+    deq = dequant_layer(q["blocks"])
+    for (path, a), b in zip(
+            jax.tree_util.tree_flatten_with_path(params["blocks"])[0],
+            jax.tree.leaves(deq)):
+        af = np.asarray(a, np.float32)
+        bf = np.asarray(b, np.float32)
+        if af.shape != bf.shape:
+            continue
+        # per-channel absmax/127 error bound (+ bf16 scale rounding slack)
+        bound = np.abs(af).max() / 127.0 * 1.1 + 1e-6
+        assert np.abs(af - bf).max() <= bound, path
+
+
+def test_quantize_skips_small_leaves(params):
+    q = quantize_blocks(params["blocks"])
+    # norms stay bf16 leaves, matrices become {'q','s'}
+    assert not isinstance(q["ln1"]["w"], dict)
+    assert set(q["attn"]["wq"]) == {"q", "s"}
+    assert q["attn"]["wq"]["q"].dtype == jnp.int8
+    # embed/head untouched by quantize_params
+    qp = quantize_params(params)
+    assert qp["embed"]["tok"].dtype == params["embed"]["tok"].dtype
+
+
+def test_quantized_tree_eval_shape_stable(params):
+    """input_specs relies on eval_shape(quantize_params) being allocation-
+    free and structure-stable."""
+    t = jax.eval_shape(quantize_params, params)
+    q = quantize_params(params)
+    assert jax.tree.structure(t) == jax.tree.structure(q)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(q)):
+        assert a.shape == b.shape and a.dtype == b.dtype
