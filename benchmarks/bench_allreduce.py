@@ -1,6 +1,6 @@
 """Paper Figs. 4 & 6 (+ Appendix C.3): all-reduce algorithm comparison.
 
-Three evidence channels (no real interconnect in this container):
+Four evidence channels (no real interconnect in this container):
 1. alpha-beta model sweep — NCCL Ring/Tree vs NVRAR across message sizes and
    GPU counts on Perlmutter/Vista constants (the paper's own modelling
    frame, Eqs. 1-6);
@@ -8,7 +8,11 @@ Three evidence channels (no real interconnect in this container):
    the 512-chip multi-pod mesh with cross-pod TP and compare *slow-axis
    (DCN) collective payload bytes* from the lowered module: NVRAR's
    reduce-scatter shrinks the inter-node payload by G=16x;
-3. the TPU-target projection with v5e ICI/DCN constants.
+3. the TPU-target projection with v5e ICI/DCN constants;
+4. ``--sweep``: a REAL strategy x message-size latency grid measured on 8
+   simulated host devices, cross-checked against the autotuned dispatcher's
+   per-bucket pick (chosen-vs-best regret), persisted to
+   ``BENCH_allreduce.json`` so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -16,6 +20,11 @@ from .common import emit
 
 
 KB = 1024
+MB = 1024 * KB
+
+# --sweep grid: decode-regime through clearly bandwidth-bound messages.
+SWEEP_SIZES = (16 * KB, 64 * KB, 256 * KB, 1 * MB, 4 * MB, 16 * MB)
+SWEEP_STRATEGIES = ("flat", "hier_ring", "hier_rd", "hier_rd_halving")
 
 
 def model_sweep():
@@ -74,11 +83,122 @@ def hlo_structural():
              "per_layer_inter_payload_shrinks_by_G")
 
 
+def measured_sweep(out_path: str = "BENCH_allreduce.json"):
+    """Measure every strategy at every SWEEP_SIZES message on an 8-device
+    (2 pod x 4 model) host mesh, record into an AutoTuner, and emit the
+    strategy grid + the dispatcher's chosen-vs-best regret per size bucket.
+
+    Requires >= 8 devices (the ``--sweep`` entry point forces them before
+    jax initializes).
+    """
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.compat import make_mesh, shard_map
+    from repro.core import tp_all_reduce, ParallelCtx, autotune
+    from repro.core import comm_model as cm
+    from .common import timeit
+
+    if len(jax.devices()) < 8:
+        emit("sweep/skipped", 0.0, "needs_8_devices")
+        return None
+
+    mesh = make_mesh((2, 4), ("pod", "model"))
+    fast_n, slow_n = 4, 2
+    tuner = autotune.AutoTuner(cm.TPU_V5E)
+    grid = []
+    picks = []
+    for msg_bytes in SWEEP_SIZES:
+        n_elems = msg_bytes // 4  # f32 payload
+        x = np.random.default_rng(0).standard_normal(n_elems) \
+            .astype(np.float32)
+        measured = {}
+        for strat in SWEEP_STRATEGIES:
+            ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                              ar_strategy=strat)
+            # Replicated input: every device holds the FULL msg_bytes
+            # partial, exactly like a TP decode partial sum — and exactly
+            # how the runtime dispatcher (_resolve_auto) keys the lookup.
+            f = jax.jit(shard_map(
+                lambda v: tp_all_reduce(v, ctx, scatter_dim=-1),
+                mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False))
+            us = timeit(lambda: jax.block_until_ready(f(x)),
+                        warmup=2, iters=5)
+            measured[strat] = us
+            # Record under every dtype the dispatcher queries: the byte
+            # bucket already encodes the size, and what we measure here is
+            # collective *structure*, which is dtype-agnostic — without
+            # this, bf16 decode lookups (AutoTuner.choose's default) would
+            # miss every measured entry.
+            for dt in ("float32", "bfloat16", "float16"):
+                tuner.record(msg_bytes, fast_n, slow_n, dt, strat,
+                             us * 1e-6)
+            grid.append({"msg_bytes": msg_bytes, "strategy": strat,
+                         "us": us})
+            emit(f"sweep/allreduce_{msg_bytes // KB}KB_{strat}", us,
+                 f"devices=8;fast={fast_n};slow={slow_n}")
+        analytic = tuner.choose(msg_bytes, fast_n, slow_n,
+                                "float32").strategy
+        best = min(measured, key=measured.get)
+        regret = measured[analytic] / measured[best] - 1.0
+        picks.append({"msg_bytes": msg_bytes, "analytic_pick": analytic,
+                      "measured_best": best,
+                      "analytic_us": measured[analytic],
+                      "best_us": measured[best],
+                      "regret": regret})
+        emit(f"sweep/pick_{msg_bytes // KB}KB", measured[analytic],
+             f"analytic={analytic};best={best};regret={regret:.3f}")
+    # refine: measured winners overwrite the analytic seeds
+    tuner.refine()
+    doc = {
+        "device_count": 8,
+        "mesh": [2, 4],
+        "topology": {"fast": fast_n, "slow": slow_n},
+        "dtype": "float32",
+        "note": ("latencies are CPU host-device emulation - relative "
+                 "ordering tracks collective structure (message count / "
+                 "payload), not real ICI/DCN wire time"),
+        "grid": grid,
+        "picks": picks,
+        "tuned_table": tuner.to_json(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    emit("sweep/json_written", float(len(grid)), out_path)
+    return doc
+
+
 def run():
     model_sweep()
     tpu_projection()
     hlo_structural()
 
 
+def main(argv=None):
+    import argparse
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="measure the strategy x message-size grid on 8 "
+                         "host devices and write BENCH_allreduce.json")
+    ap.add_argument("--out", default="BENCH_allreduce.json")
+    args = ap.parse_args(argv)
+    if not args.sweep:
+        run()
+        return
+    if "jax" in sys.modules:
+        raise SystemExit("--sweep must configure devices before jax "
+                         "initializes; run as a fresh process")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + " --xla_force_host_platform_device_count=8").strip()
+    measured_sweep(args.out)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -48,15 +48,19 @@ def kernel_structure():
         return
     import numpy as np
     import jax.numpy as jnp
-    from jax import shard_map
-    from jax.sharding import PartitionSpec as P, AxisType
-    from jax.experimental.pallas import tpu as pltpu
+    from jax.sharding import PartitionSpec as P
+    from repro.core.compat import (AxisType, make_mesh, shard_map,
+                                   tpu_interpret_params)
     from repro.kernels.rd_allreduce import rd_all_reduce_pallas
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    interp = tpu_interpret_params()
+    if interp is None:
+        emit("table5/kernel_structure", 0.0, "skipped=no_tpu_interpret_mode")
+        return
+    mesh = make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
     for nc in (1, 4):
         f = shard_map(
             lambda v: rd_all_reduce_pallas(
-                v, "pod", n_chunks=nc, interpret=pltpu.InterpretParams()),
+                v, "pod", n_chunks=nc, interpret=interp),
             mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
             check_vma=False)
         x = jnp.zeros((4, 512), jnp.float32)

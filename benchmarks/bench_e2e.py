@@ -48,14 +48,14 @@ def real_integration():
         return
     import numpy as np
     import jax.numpy as jnp
-    from jax.sharding import AxisType
+    from repro.core.compat import AxisType, make_mesh
     from repro.core.pcontext import ParallelCtx
     from repro.models import ModelConfig, make_plan, init_params
     from repro.parallel.steps import build_decode_step, build_prefill
     cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
                       d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
                       d_ff=128, vocab_size=96, dtype=jnp.float32)
-    mesh = jax.make_mesh((2, 4), ("pod", "model"),
+    mesh = make_mesh((2, 4), ("pod", "model"),
                          axis_types=(AxisType.Auto,) * 2)
     toks = {}
     for strat in ("flat", "hier_rd"):
@@ -79,10 +79,60 @@ def real_integration():
     assert same
 
 
+def crossover_sweep(out_path: str = "BENCH_crossover.json"):
+    """Decode-regime crossover table: for each (model d_model x batch)
+    decode all-reduce message size, the modelled per-strategy latency on the
+    tpu_v5e NetworkSpec and the ``ar_strategy="auto"`` dispatcher's pick.
+
+    This is the table the paper's Sec. 4.3/5 crossover claim reduces to for
+    our target topology (16-wide ICI fast axis x 2/4 DCN pods); device-free.
+    """
+    import json
+    from repro.core import autotune
+    from repro.core.comm_model import TPU_V5E, decode_allreduce_bytes
+
+    rows = []
+    for d_model in (2048, 4096, 8192, 16384):
+        for batch in (1, 8, 32, 128):
+            msg = decode_allreduce_bytes(batch, d_model)  # bf16
+            for slow in (2, 4):
+                fast = 16
+                times = autotune.predict_times(msg, fast, slow, TPU_V5E)
+                pick = autotune.analytic_choice(msg, fast, slow, TPU_V5E)
+                rows.append({
+                    "d_model": d_model, "batch": batch, "msg_bytes": msg,
+                    "fast": fast, "slow": slow,
+                    "pick": pick.strategy, "rd_chunks": pick.rd_chunks,
+                    "t_us": {s: t * 1e6 for s, t in times.items()},
+                })
+                emit(f"crossover/H{d_model}_B{batch}_pods{slow}",
+                     times[pick.strategy] * 1e6,
+                     f"msg_kb={msg // 1024};pick={pick.strategy}")
+    with open(out_path, "w") as f:
+        json.dump({"network": "tpu_v5e", "rows": rows}, f, indent=2,
+                  sort_keys=True)
+    emit("crossover/json_written", float(len(rows)), out_path)
+    return rows
+
+
 def run():
     simulated()
     real_integration()
 
 
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="emit the decode crossover table "
+                         "(BENCH_crossover.json); device-free")
+    ap.add_argument("--out", default="BENCH_crossover.json")
+    args = ap.parse_args(argv)
+    if args.sweep:
+        crossover_sweep(args.out)
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

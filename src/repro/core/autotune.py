@@ -1,0 +1,328 @@
+"""Message-size-aware all-reduce strategy autotuner.
+
+The paper's Sec. 4.3/5 finding is that the best all-reduce algorithm is a
+function of message size and topology: recursive doubling (NVRAR) wins in the
+latency-bound 128 KB-2 MB regime, ring-style algorithms win once the transfer
+is bandwidth-bound.  A single statically chosen ``ParallelCtx.ar_strategy``
+therefore leaves performance on the table whenever one program contains
+all-reduces on both sides of the crossover (decode: B x H activations; embed:
+vocab partials; training: gradient buckets).
+
+This module provides the dispatcher behind ``ar_strategy="auto"``:
+
+* a **dispatch table** keyed on (message-byte bucket, fast-axis size,
+  slow-axis size, dtype) mapping to an :class:`ARChoice`
+  (strategy + rd_chunks + compression);
+* **analytic seeding** from the alpha-beta models in
+  :mod:`repro.core.comm_model` (each strategy's predicted time on the
+  configured :class:`NetworkSpec`, honest full-exchange form for RD since
+  that is what :func:`repro.core.hierarchical.rd_all_reduce` implements);
+* **measurement refinement**: benchmarks record observed latencies with
+  :meth:`AutoTuner.record`; :meth:`AutoTuner.refine` overrides the analytic
+  pick wherever a measured winner exists;
+* **JSON persistence** (:meth:`AutoTuner.save` / :meth:`AutoTuner.load`) so a
+  tuned table survives across runs and can be shipped with a deployment.
+
+Resolution happens at *trace time* inside ``tp_all_reduce`` — message sizes
+are static under jit/shard_map, so "auto" costs nothing at runtime: each call
+site is lowered with its own concrete strategy.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from . import comm_model as cm
+
+# Strategies the dispatcher may pick from (ParallelCtx.ar_strategy values).
+DISPATCHABLE = ("flat", "hier_ring", "hier_rd", "hier_rd_halving")
+
+# Chunked slow-axis exchange kicks in once the per-step inter payload crosses
+# this size (paper Sec. 4.2.1: overlap chunk q's reduce with chunk q+1's
+# transfer); capped so per-chunk DMA issue latency stays amortized.
+_CHUNK_THRESHOLD_BYTES = 256 * 1024
+_MAX_RD_CHUNKS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ARChoice:
+    """One dispatch-table entry: a fully resolved all-reduce configuration."""
+
+    strategy: str                 # one of DISPATCHABLE
+    rd_chunks: int = 1            # slow-axis pipeline chunks (hier_rd only)
+    compress_slow: bool = False   # int8-compress the slow exchange (lossy)
+
+    def apply(self, ctx):
+        """Concretize a ctx whose ar_strategy is 'auto' with this choice."""
+        return ctx.replace(ar_strategy=self.strategy,
+                           rd_chunks=self.rd_chunks,
+                           compress_slow=self.compress_slow)
+
+
+# ---------------------------------------------------------------------------
+# Analytic model: predicted time per strategy
+# ---------------------------------------------------------------------------
+
+
+def predict_times(msg_bytes: float, fast_size: int, slow_size: int,
+                  net: cm.NetworkSpec) -> Dict[str, float]:
+    """Predicted all-reduce seconds per strategy on ``net``.
+
+    Maps our TP topology onto the paper's (N nodes x G GPUs/node) frame:
+    G = fast-axis (ICI) size, N = slow-axis (DCN) size.  ``flat`` is the
+    XLA-default single-level ring whose inter-node links dominate (Eq. 1);
+    the hierarchical strategies share RS/AG intra phases (Eqs. 3/5) and
+    differ in the inter phase: ring, full-exchange recursive doubling
+    (Algorithm 1 — what ``rd_all_reduce`` implements), or recursive
+    halving/doubling.
+    """
+    g, n = max(1, fast_size), max(1, slow_size)
+    if n <= 1:
+        # Single-level group: every strategy degenerates to RS+AG over the
+        # fast axis; only 'flat' vs hierarchy-with-one-level remain, and
+        # they lower to the same collectives.  Report the intra ring time.
+        t = 2.0 * cm.t_reduce_scatter_intra(msg_bytes, g, net)
+        return {s: t for s in DISPATCHABLE}
+    intra = (cm.t_reduce_scatter_intra(msg_bytes, g, net)
+             + cm.t_allgather_intra(msg_bytes, g, net))
+    shard = msg_bytes / g  # slow phase operates on the RS-scattered shard
+    # inter-node ring all-reduce of the shard over n endpoints
+    ring_inter = 2.0 * (n - 1) * net.alpha_inter \
+        + 2.0 * (n - 1) / n * (shard / net.beta_inter)
+    rd_inter = cm.t_rd_inter_full_exchange(msg_bytes, n, g, net)
+    halving_inter = cm.t_rd_halving_inter(msg_bytes, n, g, net)
+    return {
+        "flat": cm.t_ring_allreduce(msg_bytes, n, g, net),
+        "hier_ring": intra + ring_inter,
+        "hier_rd": intra + rd_inter,
+        "hier_rd_halving": intra + halving_inter,
+    }
+
+
+def _rd_chunks_for(msg_bytes: float, fast_size: int) -> int:
+    """Pipeline chunk count for the hier_rd slow exchange (Sec. 4.2.1):
+    one chunk per _CHUNK_THRESHOLD_BYTES of the RS-scattered shard,
+    capped so per-chunk issue latency stays amortized."""
+    shard = msg_bytes / max(1, fast_size)
+    return int(min(_MAX_RD_CHUNKS,
+                   max(1, shard // _CHUNK_THRESHOLD_BYTES)))
+
+
+def analytic_choice(msg_bytes: float, fast_size: int, slow_size: int,
+                    net: cm.NetworkSpec, *,
+                    allow_lossy: bool = False) -> ARChoice:
+    """Best strategy under the alpha-beta model (ties break toward the
+    fewest-latency-steps strategy by dict order: flat < hier_ring < hier_rd
+    is not the right order, so we order candidates explicitly)."""
+    times = predict_times(msg_bytes, fast_size, slow_size, net)
+    # Tie-break order: fewest inter-phase latency steps first.
+    order = ("hier_rd", "hier_rd_halving", "hier_ring", "flat")
+    best = min(order, key=lambda s: times[s])
+    rd_chunks = 1
+    if best == "hier_rd" and slow_size > 1:
+        rd_chunks = _rd_chunks_for(msg_bytes, fast_size)
+    compress = False
+    if allow_lossy and slow_size > 1:
+        # int8 exchange quarters (f32) / halves (bf16) the slow payload at
+        # eta = 1 + 2/group overhead; worth it only when bandwidth-bound.
+        shard = msg_bytes / max(1, fast_size)
+        bw_term = (slow_size - 1) / slow_size * shard / net.beta_inter
+        lat_term = math.log2(max(2, slow_size)) * net.alpha_inter
+        compress = bw_term > 4.0 * lat_term
+    return ARChoice(strategy=best, rd_chunks=rd_chunks,
+                    compress_slow=compress)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table
+# ---------------------------------------------------------------------------
+
+
+def _bucket(msg_bytes: int) -> int:
+    """Power-of-two message-size bucket (log2, clamped)."""
+    return max(8, int(math.ceil(math.log2(max(1, int(msg_bytes))))))
+
+
+def _key(msg_bytes: int, fast_size: int, slow_size: int,
+         dtype: str) -> str:
+    return f"b{_bucket(msg_bytes)}/f{fast_size}/s{slow_size}/{dtype}"
+
+
+def _parse_key(key: str) -> Tuple[int, int, int]:
+    """(bucket msg_bytes, fast_size, slow_size) back out of a table key."""
+    b, f, s, _ = key.split("/")
+    return 2 ** int(b[1:]), int(f[1:]), int(s[1:])
+
+
+@dataclasses.dataclass
+class _Measurement:
+    strategy: str
+    seconds: float
+
+
+class AutoTuner:
+    """Per-call-site all-reduce dispatcher.
+
+    Analytic predictions seed every lookup; measurements (from
+    ``benchmarks/bench_allreduce.py --sweep`` or production telemetry)
+    override them after :meth:`refine`.  Thread-safe for the trace-time
+    lookup pattern.
+    """
+
+    def __init__(self, net: cm.NetworkSpec = cm.TPU_V5E, *,
+                 allow_lossy: bool = False):
+        self.net = net
+        self.allow_lossy = allow_lossy
+        self.table: Dict[str, ARChoice] = {}
+        self.measurements: Dict[str, List[_Measurement]] = {}
+        self._lock = threading.Lock()
+
+    # -- lookup ------------------------------------------------------------
+
+    def choose(self, msg_bytes: int, fast_size: int, slow_size: int,
+               dtype: str = "bfloat16") -> ARChoice:
+        key = _key(msg_bytes, fast_size, slow_size, dtype)
+        with self._lock:
+            hit = self.table.get(key)
+            if hit is not None:
+                return hit
+            choice = analytic_choice(msg_bytes, fast_size, slow_size,
+                                     self.net, allow_lossy=self.allow_lossy)
+            self.table[key] = choice
+            return choice
+
+    # -- measurement refinement -------------------------------------------
+
+    def record(self, msg_bytes: int, fast_size: int, slow_size: int,
+               dtype: str, strategy: str, seconds: float) -> None:
+        key = _key(msg_bytes, fast_size, slow_size, dtype)
+        with self._lock:
+            self.measurements.setdefault(key, []).append(
+                _Measurement(strategy, seconds))
+
+    def refine(self) -> int:
+        """Overwrite table entries with measured winners; returns the number
+        of entries changed."""
+        changed = 0
+        with self._lock:
+            for key, ms in self.measurements.items():
+                best = min(ms, key=lambda m: m.seconds)
+                prev = self.table.get(key)
+                rd_chunks = 1
+                if best.strategy == "hier_rd":
+                    # Recompute from the bucket, not from the previous
+                    # entry: the analytic seed only sets chunks when it
+                    # itself picked hier_rd.
+                    msg, fast, slow = _parse_key(key)
+                    if slow > 1:
+                        rd_chunks = _rd_chunks_for(msg, fast)
+                new = ARChoice(strategy=best.strategy, rd_chunks=rd_chunks,
+                               compress_slow=prev.compress_slow
+                               if prev else False)
+                if prev != new:
+                    self.table[key] = new
+                    changed += 1
+        return changed
+
+    # -- persistence -------------------------------------------------------
+
+    def to_json(self) -> Dict:
+        return {
+            "net": self.net.name,
+            "allow_lossy": self.allow_lossy,
+            "table": {k: dataclasses.asdict(v)
+                      for k, v in sorted(self.table.items())},
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "AutoTuner":
+        with open(path) as f:
+            doc = json.load(f)
+        if "tuned_table" in doc and "table" not in doc:
+            # accept a BENCH_allreduce.json sweep artifact directly
+            doc = doc["tuned_table"]
+        net = cm.NETWORKS.get(doc.get("net", "tpu_v5e"), cm.TPU_V5E)
+        t = cls(net, allow_lossy=bool(doc.get("allow_lossy", False)))
+        for k, v in doc.get("table", {}).items():
+            t.table[k] = ARChoice(**v)
+        return t
+
+
+# ---------------------------------------------------------------------------
+# Process-wide active tuner (what ar_strategy="auto" resolves against)
+# ---------------------------------------------------------------------------
+
+_ACTIVE = AutoTuner()
+
+
+def active() -> AutoTuner:
+    return _ACTIVE
+
+
+def install(tuner: AutoTuner) -> AutoTuner:
+    """Swap the process-wide tuner (returns the previous one)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, tuner
+    return prev
+
+
+def install_from_path(path: Optional[str]) -> AutoTuner:
+    """Install a persisted table if ``path`` exists; else keep/seed default.
+
+    Also honors the ``REPRO_AR_TABLE`` environment variable when ``path`` is
+    None, so deployments can point every entry point at one tuned table."""
+    if path is None:
+        path = os.environ.get("REPRO_AR_TABLE")
+    if path and os.path.exists(path):
+        install(AutoTuner.load(path))
+    return _ACTIVE
+
+
+def tuner_for(path: Optional[str]) -> AutoTuner:
+    """Resolve (without installing) the tuner a build should capture:
+    an explicit path, else ``REPRO_AR_TABLE``, else the active default."""
+    if path is None:
+        path = os.environ.get("REPRO_AR_TABLE")
+    if path and os.path.exists(path):
+        return AutoTuner.load(path)
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def using(tuner: AutoTuner):
+    """Temporarily make ``tuner`` the active dispatcher.
+
+    Step builders wrap their (traced) bodies with this so each built step
+    resolves 'auto' against the table captured at build time, even when
+    jit defers tracing past a later build that installed a different
+    table."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = tuner
+    try:
+        yield tuner
+    finally:
+        _ACTIVE = prev
+
+
+def resolve(ctx, msg_bytes: int, fast_size: int, slow_size: int,
+            dtype: str):
+    """Concretize ctx.ar_strategy == 'auto' for one call site."""
+    choice = _ACTIVE.choose(int(msg_bytes), fast_size, slow_size, str(dtype))
+    return choice.apply(ctx)
+
+
+__all__ = [
+    "ARChoice", "AutoTuner", "predict_times", "analytic_choice",
+    "active", "install", "install_from_path", "tuner_for", "using",
+    "resolve", "DISPATCHABLE",
+]

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import compat  # noqa: F401  (installs lax.axis_size on older jax)
 from .pcontext import ParallelCtx
 
 Axes = Tuple[str, ...]
@@ -215,6 +216,20 @@ def compressed_rd_all_reduce(x: jax.Array, axis: str,
 # ---------------------------------------------------------------------------
 
 
+def _resolve_auto(x: jax.Array, ctx: ParallelCtx) -> ParallelCtx:
+    """Concretize ar_strategy='auto' for this call site.
+
+    Shapes are static under jit/shard_map, so the dispatch happens at trace
+    time: each call site lowers with the strategy the autotuner picks for its
+    (message bytes, fast size, slow size, dtype) key."""
+    if ctx.ar_strategy != "auto":
+        return ctx
+    from . import autotune
+    msg_bytes = x.size * x.dtype.itemsize
+    return autotune.resolve(ctx, msg_bytes, axes_size(ctx.tp_fast),
+                            axes_size(ctx.tp_slow), x.dtype.name)
+
+
 def _slow_phase(x: jax.Array, slow: Axes, ctx: ParallelCtx) -> jax.Array:
     for ax in slow:
         if ctx.ar_strategy == "hier_ring":
@@ -279,6 +294,7 @@ def tp_all_reduce(x: jax.Array, ctx: ParallelCtx,
     fast, slow = ctx.tp_fast, ctx.tp_slow
     if not fast and not slow:
         return x
+    ctx = _resolve_auto(x, ctx)
     if (ctx.ar_strategy == "flat" or (not slow and len(fast) <= 1)) \
             and not ctx.quant_ag:
         # Single-level group: hand the whole reduction to XLA (the paper's
@@ -311,6 +327,7 @@ def tp_reduce_scatter(x: jax.Array, ctx: ParallelCtx,
     fast, slow = ctx.tp_fast, ctx.tp_slow
     if not fast and not slow:
         return x
+    ctx = _resolve_auto(x, ctx)
     dim = dim % x.ndim
     if fast:
         x = lax.psum_scatter(x, fast, scatter_dimension=dim, tiled=True)

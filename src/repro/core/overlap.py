@@ -1,0 +1,151 @@
+"""Overlapped collective-matmul: the TP output-projection + all-reduce pair
+as one software-pipelined primitive.
+
+In decode, every transformer layer ends with two row-parallel GEMMs
+(attention wo, MLP down-projection) whose partial sums are immediately
+all-reduced — and the paper shows that all-reduce dominating multi-node step
+time.  Running the GEMM to completion *then* reducing serializes compute and
+communication; Flash-Communication-style chunking recovers the overlap:
+
+    split the output features D into K chunks
+    for q in 0..K-1:   partial_q = x @ w[:, q]        (GEMM chunk q)
+                       y_q = tp_all_reduce(partial_q) (comm chunk q)
+    y = concat(y_0..y_{K-1})
+
+Chunk q's all-reduce has no data dependency on chunk q+1's GEMM, so the XLA
+latency-hiding scheduler can run them concurrently (the same independence
+idiom ``rd_all_reduce``'s chunked slow-axis exchange relies on).  Because the
+split is along the *output* dimension, every output element is produced by
+exactly the same dot product and reduction tree as the unchunked path — the
+result is bit-consistent with GEMM-then-``tp_all_reduce`` (a strict
+requirement: decode greedy tokens must not depend on the overlap knob).
+
+Total wire bytes are unchanged.  With ``ar_strategy="auto"`` the dispatch is
+resolved ONCE from the unchunked projection output and shared by every
+chunk: a per-chunk lookup on the |M|/K message could select a different
+strategy (a different device-sum order) than the unfused path and void the
+bit-consistency guarantee above.  For the same reason the lossy reduction
+knobs (``quant_ag``, ``compress_slow``) force the unchunked path: their
+per-message quantization groups would shift with the chunk boundaries.
+
+A Pallas TPU variant that fuses the slow-axis RD exchange into the GEMM
+epilogue lives in ``repro.kernels.rd_allreduce.fused_matmul`` (selected with
+``backend="pallas"``); this module's lax implementation is the portable
+default and the parity reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import hierarchical as hier
+from .pcontext import ParallelCtx
+
+
+def _resolve_auto_for_matmul(x: jax.Array, w: jax.Array,
+                             ctx: ParallelCtx) -> ParallelCtx:
+    """Concretize ar_strategy='auto' from the UNCHUNKED projection output.
+
+    Resolution must happen once, before chunking: a per-chunk lookup on the
+    |M|/K message could pick a different strategy (a different device-sum
+    order) than the unfused path and void the bit-consistency guarantee."""
+    if ctx.ar_strategy != "auto":
+        return ctx
+    from . import autotune
+    out_elems = w.shape[-1]
+    for s in x.shape[: x.ndim - (w.ndim - 1)]:
+        out_elems *= s
+    dt = jnp.result_type(x, w)
+    return autotune.resolve(ctx, out_elems * dt.itemsize,
+                            hier.axes_size(ctx.tp_fast),
+                            hier.axes_size(ctx.tp_slow), dt.name)
+
+
+def _resolve_chunks(d_out: int, fast_size: int, requested: int) -> int:
+    """Largest chunk count <= requested that divides d_out into equal chunks
+    each still divisible by the fast-axis size (psum_scatter tiling needs
+    chunk_len % fast == 0)."""
+    k = max(1, min(requested, d_out))
+    while k > 1 and (d_out % k or (d_out // k) % max(1, fast_size)):
+        k -= 1
+    return k
+
+
+def collective_matmul(x: jax.Array, w: jax.Array, ctx: ParallelCtx, *,
+                      spec: str = "bsf,fd->bsd",
+                      chunks: Optional[int] = None,
+                      backend: str = "lax") -> jax.Array:
+    """Row-parallel projection fused with its TP all-reduce.
+
+    x: local activation shard (the einsum lhs); w: this device's weight shard
+    whose **last dim is the replicated output features** (einsum rhs);
+    ``spec``: einsum spec mapping (x, w) -> partial output with the feature
+    dim last (e.g. ``"bsqh,qhd->bsd"`` for attention wo, ``"bsf,fd->bsd"``
+    for the MLP down-projection).
+
+    Returns the **fully reduced** output (what GEMM + ``tp_all_reduce``
+    would produce), with chunk q's reduction overlapped against chunk q+1's
+    GEMM when ``chunks > 1``.
+    """
+    if chunks is None:
+        chunks = ctx.overlap_chunks if ctx.overlap_matmul else 1
+    if not ctx.has_tp:
+        return jnp.einsum(spec, x, w)
+    d_out = w.shape[-1]
+    fast_n = hier.axes_size(ctx.tp_fast)
+    k = _resolve_chunks(d_out, fast_n, chunks)
+    ctx = _resolve_auto_for_matmul(x, w, ctx)
+    if ctx.quant_ag or ctx.compress_slow:
+        # Lossy reductions quantize per-message: chunking would change the
+        # quantization-group boundaries and make the output depend on the
+        # overlap knob.  Keep one message so the knob stays numerics-free.
+        k = 1
+    if backend == "pallas" and ctx.tp_slow:
+        from ..kernels.rd_allreduce.fused_matmul import (
+            collective_matmul_pallas)
+        return collective_matmul_pallas(x, w, ctx, spec=spec, chunks=k)
+    if k <= 1:
+        return hier.tp_all_reduce(jnp.einsum(spec, x, w), ctx,
+                                  scatter_dim=-1)
+    step = d_out // k
+    outs = []
+    for q in range(k):
+        wq = lax.slice_in_dim(w, q * step, (q + 1) * step, axis=-1)
+        partial = jnp.einsum(spec, x, wq)
+        outs.append(hier.tp_all_reduce(partial, ctx, scatter_dim=-1))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def collective_matmul_reduce_scatter(x: jax.Array, w: jax.Array,
+                                     ctx: ParallelCtx, *, dim: int,
+                                     spec: str = "bsf,fd->bsd",
+                                     chunks: Optional[int] = None
+                                     ) -> jax.Array:
+    """Sequence-parallel variant: chunked GEMM pipelined against
+    ``tp_reduce_scatter`` (Megatron-SP's projection + RS pair).  The scatter
+    runs along ``dim`` (sequence), the chunking along the feature dim, so
+    the two never interact and the concat order is preserved."""
+    if chunks is None:
+        chunks = ctx.overlap_chunks if ctx.overlap_matmul else 1
+    if not ctx.has_tp:
+        return jnp.einsum(spec, x, w)
+    d_out = w.shape[-1]
+    k = _resolve_chunks(d_out, 1, chunks)
+    ctx = _resolve_auto_for_matmul(x, w, ctx)
+    if ctx.compress_slow:
+        k = 1  # same lossy-quantization-boundary rule as collective_matmul
+    if k <= 1:
+        return hier.tp_reduce_scatter(jnp.einsum(spec, x, w), ctx, dim=dim)
+    step = d_out // k
+    outs = []
+    for q in range(k):
+        wq = lax.slice_in_dim(w, q * step, (q + 1) * step, axis=-1)
+        outs.append(hier.tp_reduce_scatter(jnp.einsum(spec, x, wq), ctx,
+                                           dim=dim))
+    return jnp.concatenate(outs, axis=-1)
+
+
+__all__ = ["collective_matmul", "collective_matmul_reduce_scatter"]

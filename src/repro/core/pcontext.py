@@ -27,7 +27,7 @@ from typing import Optional, Tuple
 
 AxisNames = Tuple[str, ...]
 
-AR_STRATEGIES = ("flat", "hier_ring", "hier_rd", "hier_rd_halving")
+AR_STRATEGIES = ("flat", "hier_ring", "hier_rd", "hier_rd_halving", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +43,9 @@ class ParallelCtx:
     #   hier_ring        - RS(fast) + psum(slow, XLA ring) + AG(fast)
     #   hier_rd          - RS(fast) + recursive doubling(slow) + AG(fast)  [NVRAR]
     #   hier_rd_halving  - RS(fast) + recursive halving/doubling(slow) + AG(fast)
+    #   auto             - per-call-site dispatch on (message bytes, topology,
+    #                      dtype) via repro.core.autotune (resolved at trace
+    #                      time; see DESIGN.md §Overlap-and-autotune)
     ar_strategy: str = "flat"
     # Gradient cross-pod reduction strategy ("flat" | "rd" | "rd_int8").
     grad_reduce_strategy: str = "rd"
@@ -53,6 +56,14 @@ class ParallelCtx:
     # Quantized all-gather: TP AR runs as RS(bf16) + AG(int8 + scales) —
     # cuts fast-axis AR wire bytes ~25-45% (beyond-paper optimization).
     quant_ag: bool = False
+    # Overlapped collective-matmul: route row-parallel output projections
+    # (attention wo / MLP down-proj) through repro.core.overlap so chunk q's
+    # all-reduce pipelines against chunk q+1's GEMM (Flash-Communication
+    # style comm/compute fusion; see DESIGN.md §Overlap-and-autotune).
+    overlap_matmul: bool = False
+    # Output-feature chunk count for the overlapped path (1 disables
+    # chunking even when overlap_matmul is set).
+    overlap_chunks: int = 4
 
     def __post_init__(self):
         if self.ar_strategy not in AR_STRATEGIES:

@@ -48,7 +48,13 @@ class InferenceEngine:
     def __init__(self, ap: ArchPlan, params, *, ctx: ParallelCtx = LOCAL,
                  mesh=None, s_max: int = 4096, fsdp_serve: bool = False,
                  scan_layers: bool = True, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0):
+                 top_k: int = 0, seed: int = 0,
+                 ar_table: Optional[str] = None):
+        """``ar_table``: optional path to a persisted all-reduce autotune
+        table (see repro.core.autotune); with ``ctx.ar_strategy="auto"`` the
+        decode/prefill steps dispatch each all-reduce call site on message
+        size against it.  ``ctx.overlap_matmul=True`` additionally pipelines
+        the output-projection GEMMs against their all-reduces."""
         self.ap = ap
         self.cfg = ap.cfg
         self.params = params
@@ -64,10 +70,11 @@ class InferenceEngine:
                 ap, ctx, mesh, s_max=s_max, scan_layers=scan_layers,
                 fsdp_serve=fsdp_serve,
                 frame_embeds=self.cfg.family == "encdec",
-                patch_embeds=self.cfg.family == "vlm").fn)
+                patch_embeds=self.cfg.family == "vlm",
+                ar_table=ar_table).fn)
             self._decode = build_decode_step(
                 ap, ctx, mesh, scan_layers=scan_layers,
-                fsdp_serve=fsdp_serve).jit()
+                fsdp_serve=fsdp_serve, ar_table=ar_table).jit()
         else:
             self._prefill = None
             self._decode = None

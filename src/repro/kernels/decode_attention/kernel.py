@@ -19,6 +19,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.compat import tpu_compiler_params
+
 NEG_INF = -1.0e30
 
 
@@ -102,7 +104,7 @@ def decode_attention_call(q, k, v, positions, *, window: int,
             pltpu.VMEM((block_b,), jnp.float32),
             pltpu.VMEM((block_b,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(positions, q, k, v)

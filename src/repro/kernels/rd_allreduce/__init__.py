@@ -1,4 +1,6 @@
 from .ops import rd_all_reduce_pallas
 from .ref import rd_all_reduce_ref
+from .fused_matmul import collective_matmul_pallas
 
-__all__ = ["rd_all_reduce_pallas", "rd_all_reduce_ref"]
+__all__ = ["rd_all_reduce_pallas", "rd_all_reduce_ref",
+           "collective_matmul_pallas"]

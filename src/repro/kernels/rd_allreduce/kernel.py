@@ -28,6 +28,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.compat import tpu_compiler_params
+
 
 def _rd_kernel(x_ref, out_ref, recv_ref, step_sem, send_sem, recv_sem, *,
                axis_name: str, n_devices: int, n_chunks: int):
@@ -87,6 +89,6 @@ def rd_all_reduce_kernel_call(x, *, axis_name: str, n_devices: int,
             pltpu.SemaphoreType.DMA((n_chunks,)),          # send sems
             pltpu.SemaphoreType.DMA((n_chunks,)),          # recv sems
         ],
-        compiler_params=pltpu.CompilerParams(collective_id=collective_id),
+        compiler_params=tpu_compiler_params(collective_id=collective_id),
         interpret=interpret,
     )(x)

@@ -187,6 +187,8 @@ def summarize_compiled(compiled, mesh, lowered=None) -> Dict[str, object]:
               if "pod" in mesh.axis_names else 1)
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict] per program
+        ca = ca[0] if ca else {}
     if lowered is not None:
         txt = lowered.as_text(dialect="hlo")
     else:

@@ -20,6 +20,7 @@ from jax import lax
 
 from ..core.pcontext import ParallelCtx
 from ..core import hierarchical as hier
+from ..core import overlap as ov
 from .common import ModelConfig, GQAPlan, dense_init, split_keys, place_heads
 
 Params = Dict[str, jax.Array]
@@ -275,9 +276,15 @@ def attention_decode(p: Params, h: jax.Array, cache: Dict[str, jax.Array],
                      cfg: ModelConfig, plan: GQAPlan, ctx: ParallelCtx, *,
                      positions: jax.Array,
                      q_mask_tbl: Optional[np.ndarray] = None,
-                     chunk: Optional[int] = None, ring: bool = False
+                     chunk: Optional[int] = None, ring: bool = False,
+                     project: bool = True
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode step against a KV cache.
+
+    ``project=False`` returns the pre-projection per-head output
+    (B, 1, Q, hd) instead of the wo-projected TP partial — the overlapped
+    decode path feeds it to :func:`repro.core.overlap.collective_matmul` so
+    the output projection pipelines against its own all-reduce.
 
     h: (B, 1, D); cache['k']/cache['v']: (B, S_max, U, hd);
     positions: (B,) index where the new token is written.
@@ -332,7 +339,7 @@ def attention_decode(p: Params, h: jax.Array, cache: Dict[str, jax.Array],
                   v_scale=v_scale)
     if q_mask_tbl is not None:
         o = o * take_local(q_mask_tbl, ctx)[None, None, :, None].astype(o.dtype)
-    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"])
+    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"]) if project else o
     new_cache = {"k": k, "v": v}
     if quant:
         new_cache["k_scale"] = k_scale
@@ -387,12 +394,24 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
 
 def mlp(p: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
     """Returns TP-partial output (wd/w2 row-sharded)."""
+    act = mlp_hidden(p, h, cfg)
+    return jnp.einsum("bsf,fd->bsd", act, mlp_down_w(p, cfg))
+
+
+def mlp_hidden(p: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Up-projection + activation only: the (B, S, f_local) tensor feeding
+    the row-parallel down-projection (split out so the overlapped decode
+    path can fuse that GEMM with its all-reduce)."""
     if cfg.act == "swiglu":
         a = jnp.einsum("bsd,df->bsf", h, p["wg"])
         b = jnp.einsum("bsd,df->bsf", h, p["wu"])
-        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(a) * b, p["wd"])
-    a = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["w1"]) + p["b1"])
-    return jnp.einsum("bsf,fd->bsd", a, p["w2"])
+        return jax.nn.silu(a) * b
+    return jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["w1"]) + p["b1"])
+
+
+def mlp_down_w(p: Params, cfg: ModelConfig) -> jax.Array:
+    """The row-sharded down-projection weight ((f_local, D), output last)."""
+    return p["wd"] if cfg.act == "swiglu" else p["w2"]
 
 
 # ---------------------------------------------------------------------------
@@ -532,6 +551,7 @@ __all__ = [
     "rms_norm", "layer_norm", "apply_norm", "init_norm", "rope_tables",
     "apply_rope", "init_attention", "attention", "attention_decode",
     "cross_attention", "cross_kv", "attn_core", "init_mlp", "mlp",
+    "mlp_hidden", "mlp_down_w",
     "init_embed", "embed_lookup", "lm_logits", "sharded_xent",
     "greedy_sample", "sample_token", "tp_rank", "take_local", "NEG_INF",
 ]

@@ -31,6 +31,7 @@ from jax import lax
 
 from ..core.pcontext import ParallelCtx
 from ..core import hierarchical as hier
+from ..core import overlap as ov
 from .common import ModelConfig, GQAPlan, plan_gqa, pad_to, split_keys
 from . import layers as L
 from . import moe as M
@@ -154,6 +155,26 @@ def _residual(x, partial, ctx: ParallelCtx, sp: bool):
     return x + hier.tp_all_reduce(partial, ctx, scatter_dim=-1)
 
 
+def _use_overlap(ctx: ParallelCtx) -> bool:
+    """Route row-parallel output projections through the overlapped
+    collective-matmul (the tentpole decode optimization)."""
+    return ctx.overlap_matmul and ctx.has_tp
+
+
+def _residual_proj(x, lhs, w, spec: str, ctx: ParallelCtx, sp: bool):
+    """Residual add of projection + TP reduction, overlapped when enabled.
+
+    ``lhs`` is the pre-projection activation, ``w`` the row-sharded weight
+    with output features last; numerically identical to
+    ``_residual(x, einsum(spec, lhs, w), ctx, sp)``."""
+    if _use_overlap(ctx):
+        if sp:
+            return x + ov.collective_matmul_reduce_scatter(
+                lhs, w, ctx, dim=1, spec=spec)
+        return x + ov.collective_matmul(lhs, w, ctx, spec=spec)
+    return _residual(x, jnp.einsum(spec, lhs, w), ctx, sp)
+
+
 def _gathered(x, ctx: ParallelCtx, sp: bool):
     return hier.tp_all_gather(x, ctx, dim=1) if sp else x
 
@@ -207,9 +228,12 @@ def block_forward(bp: Params, x, ap: ArchPlan, ctx: ParallelCtx, *,
         return x, aux, (state or None)
 
     h = _gathered(L.apply_norm(x, bp["ln1"], cfg), ctx, sp)
+    # hybrid mixes attn + ssm partials before reducing, so the projection
+    # cannot be fused with the reduction there — overlap dense-ish only.
+    attn_ov = _use_overlap(ctx) and cfg.family != "hybrid"
     attn_out, kv = _attention_with_kv(bp["attn"], h, ap, ctx,
                                       positions=positions, causal=causal,
-                                      chunk=chunk)
+                                      chunk=chunk, project=not attn_ov)
     if collect_state:
         state["k"], state["v"] = kv
     if cfg.family == "hybrid":
@@ -222,6 +246,9 @@ def block_forward(bp: Params, x, ap: ArchPlan, ctx: ParallelCtx, *,
         beta = bp["beta"].astype(x.dtype)
         mix = beta[0] * attn_out + beta[1] * ssm_out
         x = _residual(x, mix, ctx, sp)
+    elif attn_ov:
+        x = _residual_proj(x, attn_out, bp["attn"]["wo"], "bsqh,qhd->bsd",
+                           ctx, sp)
     else:
         x = _residual(x, attn_out, ctx, sp)
 
@@ -240,11 +267,17 @@ def block_forward(bp: Params, x, ap: ArchPlan, ctx: ParallelCtx, *,
         x = x + _moe_restore(out, ctx, sp)
     else:
         h2g = _gathered(h2, ctx, sp)
-        x = _residual(x, L.mlp(bp["mlp"], h2g, cfg), ctx, sp)
+        if _use_overlap(ctx):
+            x = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2g, cfg),
+                               L.mlp_down_w(bp["mlp"], cfg), "bsf,fd->bsd",
+                               ctx, sp)
+        else:
+            x = _residual(x, L.mlp(bp["mlp"], h2g, cfg), ctx, sp)
     return x, aux, (state or None)
 
 
-def _attention_with_kv(p, h, ap: ArchPlan, ctx, *, positions, causal, chunk):
+def _attention_with_kv(p, h, ap: ArchPlan, ctx, *, positions, causal, chunk,
+                       project: bool = True):
     cfg = ap.cfg
     q, k, v = L._qkv(p, h, ap.gqa)
     if cfg.rope_theta > 0:
@@ -257,7 +290,7 @@ def _attention_with_kv(p, h, ap: ArchPlan, ctx, *, positions, causal, chunk):
     if ap.q_mask_tbl is not None:
         o = o * L.take_local(ap.q_mask_tbl, ctx)[None, None, :, None] \
             .astype(o.dtype)
-    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"])
+    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"]) if project else o
     return out, (k, v)
 
 
@@ -461,12 +494,17 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
     h = L.apply_norm(x, bp["ln1"], cfg)
     kv_in = {k2: cache_l[k2] for k2 in
              ("k", "v", "k_scale", "v_scale") if k2 in cache_l}
+    # Decode is the paper's regime: the wo projection + all-reduce pair
+    # routes through _residual_proj (overlapped when ctx asks for it).
+    # hybrid mixes attn+ssm partials pre-reduce, so it cannot fuse and
+    # keeps the projected-partial form.
+    hybrid = cfg.family == "hybrid"
     attn_out, kv_new = L.attention_decode(
         bp["attn"], h, kv_in, cfg, ap.gqa,
         ctx, positions=positions, q_mask_tbl=ap.q_mask_tbl,
-        chunk=attn_chunk, ring=kv_ring)
+        chunk=attn_chunk, ring=kv_ring, project=hybrid)
     new_c.update(kv_new)
-    if cfg.family == "hybrid":
+    if hybrid:
         so, st = S.ssm_step(bp["ssm"], h, {"conv": cache_l["conv"],
                                            "ssm": cache_l["ssm"]}, cfg, ctx)
         new_c["conv"], new_c["ssm"] = st["conv"], st["ssm"]
@@ -474,7 +512,8 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
         x = x + hier.tp_all_reduce(beta[0] * attn_out + beta[1] * so, ctx,
                                    scatter_dim=-1)
     else:
-        x = x + hier.tp_all_reduce(attn_out, ctx, scatter_dim=-1)
+        x = _residual_proj(x, attn_out, bp["attn"]["wo"], "bsqh,qhd->bsd",
+                           ctx, sp=False)
 
     if cfg.enc_layers:
         hx = L.apply_norm(x, bp["ln_x"], cfg)
@@ -489,8 +528,9 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
         out = M.moe_ffn_dense(bp["moe"], h2, cfg, ctx)
         x = x + hier.tp_all_reduce(out, ctx, scatter_dim=-1)
     else:
-        x = x + hier.tp_all_reduce(L.mlp(bp["mlp"], h2, cfg), ctx,
-                                   scatter_dim=-1)
+        x = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2, cfg),
+                           L.mlp_down_w(bp["mlp"], cfg), "bsf,fd->bsd",
+                           ctx, sp=False)
     return x, new_c
 
 

@@ -20,10 +20,12 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P, NamedSharding
 
+from ..core.compat import shard_map
 from ..core.pcontext import ParallelCtx
+from ..core import autotune
 from ..core import hierarchical as hier
 from ..models.transformer import (ArchPlan, forward_lm, decode_step,
                                   init_cache)
@@ -227,10 +229,19 @@ def build_decode_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                       scan_layers: bool = True, fsdp_serve: bool = False,
                       sample: bool = True, attn_chunk=None,
                       kv_quant: bool = False, weight_quant: bool = False,
-                      window_cache: bool = False) -> BuiltStep:
+                      window_cache: bool = False,
+                      ar_table: Optional[str] = None) -> BuiltStep:
     """One-token decode across the batch: (params, cache, tokens, positions)
-    -> (next_tokens | logits, new_cache)."""
+    -> (next_tokens | logits, new_cache).
+
+    ``ar_table``: path to a persisted autotune table (JSON).  The tuner is
+    captured at build time and activated around the step body during
+    tracing, so every ``ar_strategy="auto"`` call site in THIS step
+    resolves against THIS table even if another build installs a different
+    one before jit traces (falls back to the analytic seed, or the
+    ``REPRO_AR_TABLE`` env var, when None/missing)."""
     cfg = ap.cfg
+    ar_tuner = autotune.tuner_for(ar_table)
     from ..models.transformer import init_params
 
     serve_ctx = ctx if fsdp_serve else ctx.replace(fsdp=())
@@ -260,12 +271,13 @@ def build_decode_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                     full[k] = shd.gather_params(params[k], fdims[k],
                                                 serve_ctx)
             params = full
-        logits, new_cache = decode_step(params, cache, tokens, positions,
-                                        ap, serve_ctx,
-                                        scan_layers=scan_layers,
-                                        layer_map=layer_map,
-                                        attn_chunk=attn_chunk,
-                                        kv_ring=window_cache)
+        with autotune.using(ar_tuner):  # trace-time 'auto' dispatch
+            logits, new_cache = decode_step(params, cache, tokens,
+                                            positions, ap, serve_ctx,
+                                            scan_layers=scan_layers,
+                                            layer_map=layer_map,
+                                            attn_chunk=attn_chunk,
+                                            kv_ring=window_cache)
         if sample:
             out = L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
         else:
@@ -291,10 +303,12 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                   scan_layers: bool = True, s_max: int,
                   fsdp_serve: bool = False, attn_chunk=None,
                   sp: bool = False,
-                  frame_embeds: bool = False, patch_embeds: bool = False
-                  ) -> BuiltStep:
-    """Prefill: run the full prompt, return (first_token, cache)."""
+                  frame_embeds: bool = False, patch_embeds: bool = False,
+                  ar_table: Optional[str] = None) -> BuiltStep:
+    """Prefill: run the full prompt, return (first_token, cache).
+    ``ar_table`` as in :func:`build_decode_step`."""
     cfg = ap.cfg
+    ar_tuner = autotune.tuner_for(ar_table)
     from ..models.transformer import init_params
 
     serve_ctx = ctx if fsdp_serve else ctx.replace(fsdp=())
@@ -323,10 +337,11 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
         B, S = tokens.shape
         chunk = attn_chunk if attn_chunk is not None \
             else (1024 if S > 8192 else 0)
-        logits, _, states, enc_out = forward_lm(
-            params, tokens, ap, serve_ctx, sp=sp,
-            scan_layers=scan_layers, collect_state=True,
-            layer_map=layer_map, chunk=chunk, **kw)
+        with autotune.using(ar_tuner):  # trace-time 'auto' dispatch
+            logits, _, states, enc_out = forward_lm(
+                params, tokens, ap, serve_ctx, sp=sp,
+                scan_layers=scan_layers, collect_state=True,
+                layer_map=layer_map, chunk=chunk, **kw)
         cache = init_cache(ap, B, s_max, local=True)
         # seed the cache from prefill states
         if "k" in cache:

@@ -1,0 +1,70 @@
+"""Pure-pytest stand-in for the subset of hypothesis this suite uses.
+
+The real hypothesis (see requirements-dev.txt) is preferred; when it is not
+installed, property tests degrade to a fixed number of seeded pseudo-random
+draws instead of erroring out at collection.  Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+Only the strategies this suite uses are implemented: ``integers`` and
+``sampled_from``.  Draws are deterministic (seeded per-test by the function
+name) so failures are reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+FALLBACK_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:  # mirrors `hypothesis.strategies` for the names used here
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+def given(*garg_strategies, **gkw_strategies):
+    """Run the wrapped test over FALLBACK_EXAMPLES seeded draws, always
+    including the boundary-ish first draw of each strategy's range."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(fn.__name__)
+            for _ in range(FALLBACK_EXAMPLES):
+                pos = tuple(s.example(rng) for s in garg_strategies)
+                kw = {k: s.example(rng) for k, s in gkw_strategies.items()}
+                fn(*args, *pos, **kw, **kwargs)
+
+        # Hide the original parameters from pytest's fixture resolution
+        # (the strategies supply them, not fixtures).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def settings(*_args, **_kwargs):  # accepted and ignored in the fallback
+    return lambda fn: fn
+
+
+__all__ = ["given", "settings", "st", "FALLBACK_EXAMPLES"]

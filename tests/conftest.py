@@ -14,6 +14,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "dist: multi-device subprocess tests (8 host devices)")
+
+
 def run_dist_case(script_name: str, n_devices: int = 8,
                   timeout: int = 900) -> str:
     """Run a tests/dist_cases/<script> in a subprocess with N host devices."""

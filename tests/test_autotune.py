@@ -1,0 +1,131 @@
+"""Device-free tests for the message-size-aware all-reduce autotuner
+(repro.core.autotune): analytic dispatch, crossover behavior, measurement
+refinement, and JSON persistence."""
+import json
+import os
+
+import pytest
+
+from repro.core import autotune as at
+from repro.core import comm_model as cm
+from repro.core.pcontext import ParallelCtx
+
+KB = 1024
+MB = 1024 * KB
+
+
+def test_auto_is_a_valid_ctx_strategy():
+    ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                      ar_strategy="auto")
+    assert ctx.ar_strategy == "auto"
+    with pytest.raises(ValueError):
+        ParallelCtx(ar_strategy="definitely_not_a_strategy")
+
+
+def test_predict_times_positive_and_monotone():
+    for net in (cm.TPU_V5E, cm.PERLMUTTER):
+        t_small = at.predict_times(64 * KB, 16, 4, net)
+        t_big = at.predict_times(64 * MB, 16, 4, net)
+        for s in at.DISPATCHABLE:
+            assert t_small[s] > 0
+            assert t_big[s] > t_small[s], (net.name, s)
+
+
+def test_auto_selects_different_strategies_small_vs_large_tpu_v5e():
+    """Acceptance: on the tpu_v5e NetworkSpec the dispatcher must flip
+    strategies between a 64 KB and a 64 MB payload (the paper's crossover:
+    recursive doubling in the latency regime, bandwidth-optimal algorithms
+    once the wire dominates)."""
+    small = at.analytic_choice(64 * KB, 16, 4, cm.TPU_V5E)
+    large = at.analytic_choice(64 * MB, 16, 4, cm.TPU_V5E)
+    assert small.strategy != large.strategy, (small, large)
+    # and the small-message pick is the paper's NVRAR-style RD
+    assert small.strategy == "hier_rd"
+    times_small = at.predict_times(64 * KB, 16, 4, cm.TPU_V5E)
+    times_large = at.predict_times(64 * MB, 16, 4, cm.TPU_V5E)
+    assert times_small[small.strategy] == min(
+        times_small[s] for s in at.DISPATCHABLE)
+    assert times_large[large.strategy] == min(
+        times_large[s] for s in at.DISPATCHABLE)
+
+
+def test_single_level_topology_degenerates():
+    choice = at.analytic_choice(256 * KB, 8, 1, cm.TPU_V5E)
+    assert choice.strategy in at.DISPATCHABLE  # no slow axis: any is fine
+    times = at.predict_times(256 * KB, 8, 1, cm.TPU_V5E)
+    assert len(set(times.values())) == 1  # all equal: one-level reduction
+
+
+def test_rd_chunks_kick_in_for_large_rd_messages():
+    # At slow=2, full-exchange RD matches every rival's bandwidth with the
+    # fewest latency steps, so hier_rd wins at any size — and once the
+    # slow-phase shard (msg/fast) crosses the chunk threshold the pick
+    # pipelines the exchange (paper Sec. 4.2.1).
+    choice = at.analytic_choice(16 * MB, 16, 2, cm.TPU_V5E)
+    assert choice.strategy == "hier_rd"
+    assert choice.rd_chunks > 1
+    # tiny messages never chunk
+    tiny = at.analytic_choice(32 * KB, 16, 4, cm.TPU_V5E)
+    assert tiny.rd_chunks == 1
+
+
+def test_tuner_lookup_caches_and_buckets():
+    t = at.AutoTuner(cm.TPU_V5E)
+    a = t.choose(100 * KB, 16, 4)
+    b = t.choose(100 * KB + 1, 16, 4)  # same pow2 bucket
+    assert a == b
+    assert len(t.table) == 1
+    t.choose(100 * KB, 16, 2)  # different topology -> new entry
+    assert len(t.table) == 2
+
+
+def test_measurement_refinement_overrides_analytic():
+    t = at.AutoTuner(cm.TPU_V5E)
+    assert t.choose(64 * KB, 16, 4).strategy == "hier_rd"
+    t.record(64 * KB, 16, 4, "bfloat16", "hier_ring", 1.0e-6)
+    t.record(64 * KB, 16, 4, "bfloat16", "hier_rd", 9.0e-6)
+    assert t.refine() == 1
+    assert t.choose(64 * KB, 16, 4).strategy == "hier_ring"
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = at.AutoTuner(cm.TPU_V5E)
+    t.choose(64 * KB, 16, 4)
+    t.choose(64 * MB, 16, 4)
+    p = os.path.join(tmp_path, "ar_table.json")
+    t.save(p)
+    doc = json.load(open(p))
+    assert doc["net"] == "tpu_v5e" and len(doc["table"]) == 2
+    t2 = at.AutoTuner.load(p)
+    assert t2.table == t.table
+
+
+def test_install_and_resolve_roundtrip():
+    prev = at.install(at.AutoTuner(cm.TPU_V5E))
+    try:
+        ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                          ar_strategy="auto")
+        r_small = at.resolve(ctx, 64 * KB, 16, 4, "bfloat16")
+        r_large = at.resolve(ctx, 64 * MB, 16, 4, "bfloat16")
+        assert r_small.ar_strategy != "auto"
+        assert r_large.ar_strategy != "auto"
+        assert r_small.ar_strategy != r_large.ar_strategy
+        # the rest of the ctx is untouched
+        assert r_small.tp_fast == ctx.tp_fast
+        assert r_small.overlap_matmul == ctx.overlap_matmul
+    finally:
+        at.install(prev)
+
+
+def test_install_from_path_env(tmp_path, monkeypatch):
+    t = at.AutoTuner(cm.PERLMUTTER)
+    t.choose(1 * MB, 4, 8)
+    p = os.path.join(tmp_path, "tbl.json")
+    t.save(p)
+    prev = at.active()
+    try:
+        monkeypatch.setenv("REPRO_AR_TABLE", p)
+        installed = at.install_from_path(None)
+        assert installed.net.name == "perlmutter"
+    finally:
+        at.install(prev)

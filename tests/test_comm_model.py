@@ -2,7 +2,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pure-pytest fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import comm_model as cm
 

@@ -10,6 +10,12 @@ def test_collective_strategies(dist_runner):
 
 
 @pytest.mark.dist
+def test_overlap_autotune(dist_runner):
+    out = dist_runner("case_overlap_autotune.py")
+    assert "overlap+autotune OK" in out
+
+
+@pytest.mark.dist
 def test_decode_parity(dist_runner):
     out = dist_runner("case_decode_parity.py")
     assert "decode parity OK" in out

@@ -2,7 +2,10 @@
 shardability)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pure-pytest fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.common import plan_gqa
 from repro.configs import ARCH_IDS, get_config

@@ -1,7 +1,10 @@
 """Property tests on the hierarchical-collective schedule mathematics
 (device-free: the schedule invariants the shard_map code relies on)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pure-pytest fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 
 @given(st.sampled_from([2, 4, 8, 16, 32, 64, 128, 256]))

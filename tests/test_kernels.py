@@ -4,7 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pure-pytest fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
