@@ -7,10 +7,8 @@ scheduler, reporting TTFT and throughput.
 (--small switches to a smoke model so the demo finishes in seconds on CPU.)
 """
 import argparse
-import time
 
 import jax
-import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.models.transformer import make_plan, init_params
@@ -36,17 +34,19 @@ def main():
     print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params)")
     ap = make_plan(cfg, 1)
     params = init_params(jax.random.PRNGKey(0), ap)
-    sched = ContinuousBatcher(ap, params, slots=args.slots, s_max=192)
+    # paged KV cache (16-token blocks) + recompile-free chunked admission
+    sched = ContinuousBatcher(ap, params, slots=args.slots, s_max=192,
+                              block_size=16, admit_mode="chunked")
     reqs = make_trace(args.requests, mean_in=24, mean_out=16, rate=4.0,
                       vocab=cfg.vocab_size, seed=0)
-    t0 = time.perf_counter()
     done = sched.run(reqs)
-    wall = time.perf_counter() - t0
-    toks = sum(len(r.output) for r in done)
-    ttft = np.mean([r.first_token_s - r.arrival_s for r in done])
-    print(f"{len(done)} requests, {toks} tokens in {wall:.1f}s "
-          f"({toks/wall:.1f} tok/s), mean TTFT {ttft:.1f} steps")
     assert all(r.output is not None for r in done)
+    m = sched.metrics(done)
+    print(f"{m.completed} requests, {m.total_new_tokens} tokens in "
+          f"{m.wall_s:.1f}s ({m.throughput_tok_s:.1f} tok/s)")
+    print(f"TTFT p50 {m.ttft_steps_p50:.1f} steps ({m.ttft_s_p50*1e3:.0f} "
+          f"ms), TPOT p50 {m.tpot_steps_p50:.2f} steps; KV peak "
+          f"{m.peak_kv_tokens} of {args.slots * 192} dense tokens")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
-"""Inference runtime: batched engine, continuous-batching scheduler, trace
-replay, and the event-driven cluster simulator used for the paper's
-strong-scaling and serving studies."""
+"""Inference runtime: batched engine, continuous-batching scheduler over the
+paged KV-cache subsystem, trace replay, and the event-driven cluster
+simulator used for the paper's strong-scaling and serving studies."""
 from .engine import InferenceEngine, GenerationResult
-from .scheduler import ContinuousBatcher, Request
+from .kv_cache import BlockAllocator, CacheStats, paged_geometry
+from .scheduler import ContinuousBatcher, Request, ServeMetrics, make_trace
 from .simulator import (ChipSpec, A100, GH200, V5E, ClusterSim,
                         simulate_batch_latency, simulate_trace)
 
 __all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
-           "Request", "ChipSpec", "A100", "GH200", "V5E", "ClusterSim",
-           "simulate_batch_latency", "simulate_trace"]
+           "Request", "ServeMetrics", "make_trace", "BlockAllocator",
+           "CacheStats", "paged_geometry", "ChipSpec", "A100", "GH200",
+           "V5E", "ClusterSim", "simulate_batch_latency", "simulate_trace"]

@@ -24,7 +24,7 @@ from jax import lax
 
 from ..core.pcontext import ParallelCtx, LOCAL
 from ..models.transformer import (ArchPlan, forward_lm, decode_step,
-                                  init_cache)
+                                  init_cache, seed_cache)
 from ..models import layers as L
 
 
@@ -48,13 +48,16 @@ class InferenceEngine:
     def __init__(self, ap: ArchPlan, params, *, ctx: ParallelCtx = LOCAL,
                  mesh=None, s_max: int = 4096, fsdp_serve: bool = False,
                  scan_layers: bool = True, temperature: float = 0.0,
-                 top_k: int = 0, seed: int = 0,
+                 top_k: int = 0, seed: int = 0, block_size: int = 0,
                  ar_table: Optional[str] = None):
         """``ar_table``: optional path to a persisted all-reduce autotune
         table (see repro.core.autotune); with ``ctx.ar_strategy="auto"`` the
         decode/prefill steps dispatch each all-reduce call site on message
         size against it.  ``ctx.overlap_matmul=True`` additionally pipelines
-        the output-projection GEMMs against their all-reduces."""
+        the output-projection GEMMs against their all-reduces.
+        ``block_size > 0`` selects the paged KV layout on the local path
+        (identity block table — the continuous batcher owns allocator-driven
+        paging; here paging is exercised for parity)."""
         self.ap = ap
         self.cfg = ap.cfg
         self.params = params
@@ -63,6 +66,11 @@ class InferenceEngine:
         self.s_max = s_max
         self.temperature = temperature
         self.top_k = top_k
+        self.block_size = block_size
+        if block_size and mesh is not None:
+            raise NotImplementedError(
+                "paged engine cache is local-path only; use "
+                "ContinuousBatcher for mesh-path paged serving")
         self._rng = jax.random.PRNGKey(seed)
         if mesh is not None:
             from ..parallel.steps import build_decode_step, build_prefill
@@ -93,20 +101,12 @@ class InferenceEngine:
         logits, _, states, enc = forward_lm(
             self.params, tokens, ap, LOCAL, collect_state=True,
             chunk=1024 if S > 8192 else 0, **extra)
-        cache = init_cache(ap, B, self.s_max)
-        if "k" in cache:
-            cache["k"] = lax.dynamic_update_slice(
-                cache["k"], states["k"].astype(cache["k"].dtype), (0,) * 5)
-            cache["v"] = lax.dynamic_update_slice(
-                cache["v"], states["v"].astype(cache["v"].dtype), (0,) * 5)
-        for nm in ("conv", "ssm", "shift_tm", "shift_cm", "wkv"):
-            if nm in cache:
-                cache[nm] = states[nm].astype(cache[nm].dtype)
+        cache = init_cache(ap, B, self.s_max, block_size=self.block_size)
+        enc_kv = None
         if cfg.enc_layers:
-            ek, ev = jax.vmap(lambda bp: L.cross_kv(bp["xattn"], enc))(
+            enc_kv = jax.vmap(lambda bp: L.cross_kv(bp["xattn"], enc))(
                 self.params["blocks"])
-            cache["enc_k"] = ek.astype(cache["enc_k"].dtype)
-            cache["enc_v"] = ev.astype(cache["enc_v"].dtype)
+        cache = seed_cache(cache, states, enc_kv=enc_kv)
         nxt = jnp.argmax(
             logits[:, -1, :cfg.vocab_size].astype(jnp.float32), axis=-1
         ).astype(jnp.int32)

@@ -1,0 +1,251 @@
+"""Paged KV-cache subsystem: host-side block-table management.
+
+The decode cache is the memory bottleneck of continuous batching: a dense
+``(slots, s_max)`` layout reserves worst-case sequence length for every slot,
+while real traces (lognormal lengths, the paper's Sec. 5.2.3 regime) leave
+most of it untouched.  The paged layout carves the cache into fixed-size
+blocks of ``block_size`` tokens and maps each slot's *logical* positions to
+*physical* blocks through a per-slot block table — the vLLM PagedAttention
+scheme, realized here on the JAX side as a gather/scatter through an int32
+table so the same jitted decode step serves any mapping.
+
+Split of responsibilities:
+
+* this module (host side): the :class:`BlockAllocator` — free-list
+  accounting, per-slot logical->physical tables, on-demand growth,
+  eviction (preemption), defragmentation, and utilization stats.  Pure
+  numpy; never traced.
+* ``models/transformer.py`` + ``models/layers.py`` (device side): the cache
+  pytree carries the table as an int32 leaf (``cache["block_tbl"]``) and the
+  decode/prefill steps gather K/V through it (see
+  ``layers.attention_decode`` / ``attention_chunk_step``).
+
+Physical block 0 is reserved as the *trash block*: the table rows of freed
+or never-admitted slots point at it, so the (fixed-shape, whole-batch)
+decode step can keep scattering the stale slots' K/V writes somewhere
+harmless without any masking in the hot path.  Trash contents are never
+read — the attention mask only exposes positions ``<= pos`` of *active*
+slots, whose tables never contain block 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Point-in-time utilization snapshot (also the bench JSON payload)."""
+    n_blocks: int            # physical blocks incl. trash
+    block_size: int
+    used_blocks: int         # currently owned by live slots
+    peak_used_blocks: int    # high-water mark since construction
+    used_tokens: int         # positions actually occupied (<= used*bs)
+    preemptions: int
+    allocations: int
+    defrags: int
+
+    @property
+    def utilization(self) -> float:
+        """Occupied tokens / reserved token capacity of the used blocks."""
+        cap = self.used_blocks * self.block_size
+        return self.used_tokens / cap if cap else 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["utilization"] = self.utilization
+        return d
+
+
+class BlockAllocator:
+    """Free-list block allocator + per-slot block tables.
+
+    ``n_blocks`` counts *all* physical blocks including the reserved trash
+    block, matching the leading dim of the device-side cache, so a cache
+    built with ``init_cache(..., block_size=bs, n_blocks=n)`` pairs with
+    ``BlockAllocator(n, bs, slots, max_blocks)`` verbatim.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, slots: int,
+                 max_blocks_per_slot: int):
+        if block_size <= 0:
+            raise ValueError("block_size must be > 0 for a paged cache")
+        if n_blocks < max_blocks_per_slot + 1:
+            raise ValueError(
+                f"n_blocks={n_blocks} cannot hold one full-length request "
+                f"({max_blocks_per_slot} blocks) plus the trash block")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.slots = slots
+        self.max_blocks = max_blocks_per_slot
+        # LIFO free list (reuse hot blocks first); block 0 is never free.
+        self._free: List[int] = list(range(n_blocks - 1, TRASH_BLOCK, -1))
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self._tokens = np.zeros((slots,), np.int64)  # occupied positions
+        self.table = np.full((slots, max_blocks_per_slot), TRASH_BLOCK,
+                             np.int32)
+        self.peak_used_blocks = 0
+        self.preemptions = 0
+        self.allocations = 0
+        self.defrags = 0
+        # bumped on every table mutation; lets callers skip device uploads
+        self.version = 0
+
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def owned(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._owned[slot])
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)  # ceil div
+
+    def can_allocate(self, slot: int, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens) - len(self._owned[slot])
+        return need <= len(self._free)
+
+    def stats(self) -> CacheStats:
+        return CacheStats(
+            n_blocks=self.n_blocks, block_size=self.block_size,
+            used_blocks=self.used_blocks,
+            peak_used_blocks=self.peak_used_blocks,
+            used_tokens=int(self._tokens.sum()),
+            preemptions=self.preemptions, allocations=self.allocations,
+            defrags=self.defrags)
+
+    # -- allocate / free ---------------------------------------------------
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to cover logical positions [0, n_tokens).
+
+        Returns False (no state change) when the free list cannot cover the
+        growth — the scheduler then preempts somebody and retries.
+        """
+        need_total = self.blocks_for(n_tokens)
+        if need_total > self.max_blocks:
+            raise ValueError(
+                f"request needs {need_total} blocks > max_blocks_per_slot="
+                f"{self.max_blocks} (s_max too small)")
+        own = self._owned[slot]
+        grow = need_total - len(own)
+        if grow > len(self._free):
+            return False
+        for _ in range(max(grow, 0)):
+            b = self._free.pop()
+            self.table[slot, len(own)] = b
+            own.append(b)
+            self.allocations += 1
+            self.version += 1
+        self._tokens[slot] = max(self._tokens[slot], n_tokens)
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
+        return True
+
+    def reset_stats(self) -> None:
+        """Zero the trace-scoped counters (peak/preemptions/allocations/
+        defrags) so a fresh replay reports its own numbers; current
+        ownership is untouched."""
+        self.peak_used_blocks = self.used_blocks
+        self.preemptions = 0
+        self.allocations = 0
+        self.defrags = 0
+
+    def note_usage(self, slot: int, n_tokens: int) -> None:
+        """Record occupied positions that did not require growth (writes
+        inside an already-allocated block) so utilization stats stay exact
+        between block-boundary ``ensure`` calls."""
+        assert self.blocks_for(n_tokens) <= len(self._owned[slot]) or \
+            n_tokens == 0, (slot, n_tokens)
+        self._tokens[slot] = max(self._tokens[slot], n_tokens)
+
+    def free(self, slot: int) -> int:
+        """Release every block of ``slot``; its table row reverts to trash.
+        Returns the number of blocks released."""
+        own = self._owned[slot]
+        n = len(own)
+        # LIFO: freed blocks go back on top, most recently used first.
+        self._free.extend(reversed(own))
+        own.clear()
+        self.table[slot, :] = TRASH_BLOCK
+        self._tokens[slot] = 0
+        if n:
+            self.version += 1
+        return n
+
+    def preempt(self, slot: int) -> int:
+        """Evict ``slot`` (count it as a preemption) and return its blocks."""
+        self.preemptions += 1
+        return self.free(slot)
+
+    # -- defragmentation ---------------------------------------------------
+
+    def defragment(self) -> Optional[np.ndarray]:
+        """Compact live blocks into the lowest physical indices.
+
+        Returns ``perm`` (n_blocks,) int32 with ``perm[new] = old`` — apply
+        ``cache_k = cache_k[:, perm]`` (and same for v) on device, in the
+        same transaction as uploading the rewritten ``self.table``.  Returns
+        None when already compact (no device work needed).
+        """
+        live = [b for own in self._owned for b in own]
+        if sorted(live) == list(range(1, len(live) + 1)):
+            return None
+        old_to_new = {TRASH_BLOCK: TRASH_BLOCK}
+        nxt = 1
+        perm = np.empty((self.n_blocks,), np.int32)
+        perm[TRASH_BLOCK] = TRASH_BLOCK
+        for own in self._owned:
+            for i, b in enumerate(own):
+                old_to_new[b] = nxt
+                perm[nxt] = b
+                nxt += 1
+        # leftover physical indices map from the remaining old blocks
+        rest = [b for b in range(1, self.n_blocks) if b not in old_to_new]
+        for new, old in zip(range(nxt, self.n_blocks), rest):
+            perm[new] = old
+        for s, own in enumerate(self._owned):
+            self._owned[s] = [old_to_new[b] for b in own]
+            for i, b in enumerate(self._owned[s]):
+                self.table[s, i] = b
+        self._free = list(range(self.n_blocks - 1, nxt - 1, -1))
+        self.defrags += 1
+        self.version += 1
+        return perm
+
+    # -- invariant checking (tests / debug) --------------------------------
+
+    def check(self) -> None:
+        """Assert the free list + ownership exactly partition the pool."""
+        owned = [b for own in self._owned for b in own]
+        assert TRASH_BLOCK not in owned, "trash block allocated"
+        assert TRASH_BLOCK not in self._free, "trash block on free list"
+        all_b = sorted(owned + self._free)
+        assert all_b == list(range(1, self.n_blocks)), \
+            f"pool leak/dup: {len(owned)} owned + {len(self._free)} free"
+        for s, own in enumerate(self._owned):
+            got = list(self.table[s, :len(own)])
+            assert got == own, f"slot {s} table mismatch"
+            assert (self.table[s, len(own):] == TRASH_BLOCK).all(), \
+                f"slot {s} stale table tail"
+
+
+def paged_geometry(s_max: int, block_size: int) -> int:
+    """max_blocks_per_slot for a given logical capacity (s_max must divide
+    evenly so the gathered logical cache is exactly (slots, s_max))."""
+    if s_max % block_size:
+        raise ValueError(f"s_max={s_max} not a multiple of "
+                         f"block_size={block_size}")
+    return s_max // block_size
+
+
+__all__ = ["BlockAllocator", "CacheStats", "paged_geometry", "TRASH_BLOCK"]

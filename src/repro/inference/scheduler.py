@@ -2,26 +2,48 @@
 
 The scheduler owns a fixed pool of batch slots.  Each engine step decodes all
 active slots; freed slots (finished requests) are refilled from the waiting
-queue, and refills trigger a slot-local prefill whose KV is spliced into the
-shared cache.  Positions are per-slot, so the single decode-step executable
-serves ragged batches — the same mechanism the paper's trace evaluation
-(Sec. 5.2.3) relies on.
+queue.  Positions are per-slot, so the single decode-step executable serves
+ragged batches — the mechanism the paper's trace evaluation (Sec. 5.2.3)
+relies on.
+
+This is the *unified serving stack* over the paged KV-cache subsystem:
+
+* the per-step work (decode + sampling + token/position/remaining update)
+  is one jitted executable built by ``parallel.steps.build_serve_step`` —
+  with ``mesh=None`` it runs single-device, with a mesh it is the
+  shard_map'd production step inheriting ``ar_table`` (``ar_strategy=
+  "auto"``) and ``ctx.overlap_matmul``.  The host only reads back the
+  emitted tokens and done flags.
+* admission is a jitted on-device splice (``build_admit_step`` /
+  ``build_admit_chunk_step``), not host ``dynamic_update_slice`` round
+  trips.  ``admit_mode="chunked"`` feeds prompts through a fixed-size
+  chunked prefill (one executable for all lengths; dense families);
+  ``"full"`` runs one prefill executable per distinct prompt length
+  (every family).
+* with ``block_size > 0`` the KV cache is paged: a host-side
+  :class:`~repro.inference.kv_cache.BlockAllocator` grows each slot's
+  block list on demand and *preempts* (evicts + requeues) the youngest
+  request when the pool runs dry, so a slot count that would overflow a
+  dense ``(slots, s_max)`` cache keeps serving.
+
+Scheduling time is a logical step clock (1.0 per engine step) so traces
+replay deterministically; wall-clock timestamps are recorded alongside for
+TTFT / TPOT reporting (see :class:`ServeMetrics`).
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
-from ..core.pcontext import LOCAL
-from ..models.transformer import init_cache, forward_lm, decode_step
-from ..models import layers as L
+from ..core.pcontext import ParallelCtx, LOCAL
+from ..parallel.steps import (build_admit_chunk_step, build_admit_step,
+                              build_cache_init, build_serve_step)
+from .kv_cache import BlockAllocator, paged_geometry
 
 
 @dataclasses.dataclass
@@ -29,86 +51,306 @@ class Request:
     rid: int
     prompt: np.ndarray           # (S,)
     max_new: int
-    arrival_s: float = 0.0
+    arrival_s: float = 0.0       # logical (step-clock) arrival
     # filled by the scheduler:
-    first_token_s: float = -1.0
-    done_s: float = -1.0
+    first_token_s: float = -1.0  # wall-clock, relative to run() start
+    done_s: float = -1.0         # wall-clock, relative to run() start
+    admit_step: int = -1         # logical step of (last) admission
+    done_step: int = -1
+    preempted: int = 0           # times evicted and recomputed
     output: Optional[np.ndarray] = None
 
 
-class ContinuousBatcher:
-    """Slot-based continuous batching on the local engine path."""
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
+        else float("nan")
 
-    def __init__(self, ap, params, *, slots: int = 8, s_max: int = 512):
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Aggregate trace-replay metrics.
+
+    TTFT (time-to-first-token) and TPOT (time-per-output-token) are
+    reported in logical *steps* (deterministic: admission wait + prefill
+    counts 1 step) and converted to wall seconds via the measured mean
+    step time, so the numbers are stable under CI jitter but still carry
+    real units.
+    """
+    requests: int
+    completed: int
+    total_new_tokens: int
+    steps: int
+    wall_s: float
+    throughput_tok_s: float
+    ttft_steps_p50: float
+    ttft_steps_p99: float
+    tpot_steps_p50: float
+    tpot_steps_p99: float
+    ttft_s_p50: float
+    ttft_s_p99: float
+    tpot_s_p50: float
+    tpot_s_p99: float
+    preemptions: int
+    peak_kv_tokens: int          # high-water cache footprint, in tokens
+    kv_capacity_tokens: int      # reserved footprint of the layout
+    cache_utilization: float     # occupied / reserved at peak-usage basis
+    cache_stats: Optional[Dict[str, Any]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching on the local or mesh engine path."""
+
+    def __init__(self, ap, params, *, slots: int = 8, s_max: int = 512,
+                 ctx: ParallelCtx = LOCAL, mesh=None,
+                 block_size: int = 0, n_blocks: Optional[int] = None,
+                 ar_table: Optional[str] = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 scan_layers: bool = True, fsdp_serve: bool = False,
+                 admit_mode: str = "full", admit_chunk: int = 32):
         self.ap, self.cfg, self.params = ap, ap.cfg, params
         self.slots = slots
         self.s_max = s_max
-        self._decode_jit = jax.jit(
-            lambda cache, toks, pos: decode_step(self.params, cache, toks,
-                                                 pos, self.ap, LOCAL),
-            donate_argnums=(0,))
-        self._prefill_jit = jax.jit(
-            lambda tok: forward_lm(self.params, tok, self.ap, LOCAL,
-                                   collect_state=True))
-        self.cache = init_cache(ap, slots, s_max)
+        self.ctx = ctx
+        self.mesh = mesh
+        self.temperature = temperature
+        self.top_k = top_k
+        self._rng = jax.random.PRNGKey(seed)
+        if admit_mode not in ("full", "chunked"):
+            raise ValueError(f"unknown admit_mode {admit_mode!r}")
+        if admit_mode == "chunked" and self.cfg.family != "dense":
+            raise ValueError("chunked admission needs an attention-only "
+                             f"dense family, not {self.cfg.family!r}")
+        if admit_mode == "chunked" and s_max % admit_chunk:
+            # trailing-chunk pads would reach positions >= s_max; the paged
+            # write path routes those to trash, but keep geometry exact
+            raise ValueError(f"s_max={s_max} must be a multiple of "
+                             f"admit_chunk={admit_chunk}")
+        self.admit_mode = admit_mode
+        self.admit_chunk = admit_chunk
+        self.block_size = block_size
+        # paging applies to the self-attention K/V only; attention-free
+        # archs (rwkv) have fixed-size recurrent state and stay dense
+        self.paged = block_size > 0 and not self.cfg.attn_free
+        kw = dict(s_max=s_max, slots=slots, scan_layers=scan_layers,
+                  fsdp_serve=fsdp_serve,
+                  block_size=block_size if self.paged else 0,
+                  n_blocks=n_blocks)
+        self.alloc: Optional[BlockAllocator] = None
+        if self.paged:
+            max_blocks = paged_geometry(s_max, block_size)
+            if n_blocks is None:
+                kw["n_blocks"] = n_blocks = slots * max_blocks + 1
+            self.alloc = BlockAllocator(n_blocks, block_size, slots,
+                                        max_blocks)
+        sample_kw = dict(temperature=temperature, top_k=top_k)
+        self.cache = build_cache_init(
+            ap, ctx, mesh, **{k: v for k, v in kw.items()
+                              if k != "scan_layers"}).jit()()
+        self._serve = build_serve_step(ap, ctx, mesh, ar_table=ar_table,
+                                       **sample_kw, **kw).jit()
+        self._admit_kw = dict(ar_table=ar_table, **sample_kw, **kw)
+        self._admit_full: Dict[int, Any] = {}   # prompt_len -> jitted fn
+        self._admit_chunked = None
+        if admit_mode == "chunked":
+            # final chunk samples the first token; intermediate chunks run
+            # a logits-free executable (no vocab head / TP gather)
+            self._admit_chunked = build_admit_chunk_step(
+                ap, ctx, mesh, chunk=admit_chunk, **self._admit_kw).jit()
+            self._admit_chunked_mid = build_admit_chunk_step(
+                ap, ctx, mesh, chunk=admit_chunk, sample=False,
+                **self._admit_kw).jit()
+        if self.paged:
+            self.cache["block_tbl"] = jnp.asarray(self.alloc.table)
+
+        # host mirrors of the device-side slot state
         self.positions = np.zeros((slots,), np.int32)
         self.remaining = np.zeros((slots,), np.int32)
-        self.active: List[Optional[Request]] = [None] * slots
         self.tokens = np.zeros((slots,), np.int32)
+        self.active_mask = np.zeros((slots,), bool)
+        self._admit_seq = np.full((slots,), -1, np.int64)  # admission order
+        self._seq = 0
+        self.active: List[Optional[Request]] = [None] * slots
         self.outputs: Dict[int, List[int]] = {}
+        self._state = None       # device state dict (pushed lazily)
+        self._dirty = True
+        self._table_version = -1
+        self.steps_run = 0
+        self._wall0 = None
+        self._wall_run = 0.0     # wall seconds of the last run(), at drain
+        self._peak_occupied = 0  # max sum of live positions, in tokens
+        self._requeue: List[Request] = []   # preempted, awaiting re-admission
 
-    # -- slot fill (prefill one request, splice its state into the cache) ---
-    def _admit(self, slot: int, req: Request, now: float):
-        tok = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, _, states, _ = self._prefill_jit(tok)
-        S = req.prompt.shape[0]
-        if "k" in self.cache:
-            for nm in ("k", "v"):
-                upd = states[nm].astype(self.cache[nm].dtype)  # (L,1,S,U,hd)
-                self.cache[nm] = lax.dynamic_update_slice(
-                    self.cache[nm], upd, (0, slot, 0, 0, 0))
-        for nm in ("conv", "ssm", "shift_tm", "shift_cm", "wkv"):
-            if nm in self.cache:
-                upd = states[nm].astype(self.cache[nm].dtype)
-                idx = (0, slot) + (0,) * (self.cache[nm].ndim - 2)
-                self.cache[nm] = lax.dynamic_update_slice(self.cache[nm],
-                                                          upd, idx)
-        nxt = int(jnp.argmax(
-            logits[0, -1, :self.cfg.vocab_size].astype(jnp.float32)))
+    # -- state/device sync ---------------------------------------------------
+
+    def _push_state(self):
+        self._state = {"tokens": jnp.asarray(self.tokens),
+                       "positions": jnp.asarray(self.positions),
+                       "remaining": jnp.asarray(self.remaining),
+                       "active": jnp.asarray(self.active_mask)}
+        self._dirty = False
+
+    def _sync_table(self):
+        if self.alloc.version != self._table_version:
+            self.cache["block_tbl"] = jnp.asarray(self.alloc.table)
+            self._table_version = self.alloc.version
+
+    def _step_rng(self):
+        if self.temperature > 0.0:
+            self._rng, r = jax.random.split(self._rng)
+            return r
+        return self._rng
+
+    # -- admission -----------------------------------------------------------
+
+    def _admit_fn(self, prompt_len: int):
+        fn = self._admit_full.get(prompt_len)
+        if fn is None:
+            fn = build_admit_step(self.ap, self.ctx, self.mesh,
+                                  prompt_len=prompt_len,
+                                  **self._admit_kw).jit()
+            self._admit_full[prompt_len] = fn
+        return fn
+
+    def _admit(self, slot: int, req: Request, now: float) -> bool:
+        """Prefill one request into ``slot`` (on-device splice).  Returns
+        False when the paged pool cannot hold the prompt right now."""
+        S = int(req.prompt.shape[0])
+        if S + 1 > self.s_max:
+            raise ValueError(f"prompt len {S} + 1 exceeds s_max={self.s_max}")
+        if self.alloc is not None:
+            # +1: the first decode write lands at position S
+            if not self.alloc.ensure(slot, S + 1):
+                return False
+            self._sync_table()
+        slot_dev = jnp.int32(slot)
+        if self.admit_mode == "chunked":
+            C = self.admit_chunk
+            padded = np.zeros((-(-S // C) * C,), np.int32)
+            padded[:S] = req.prompt
+            tok = None
+            n_chunks = padded.shape[0] // C
+            for i in range(n_chunks):
+                chunk = jnp.asarray(padded[None, i * C:(i + 1) * C])
+                pos = jnp.arange(i * C, (i + 1) * C, dtype=jnp.int32)[None]
+                if i < n_chunks - 1:   # rng untouched: nothing samples
+                    self.cache = self._admit_chunked_mid(
+                        self.params, self.cache, chunk, pos, slot_dev,
+                        jnp.int32((S - 1) % C), self._rng)
+                else:
+                    tok, self.cache = self._admit_chunked(
+                        self.params, self.cache, chunk, pos, slot_dev,
+                        jnp.int32((S - 1) % C), self._step_rng())
+        else:
+            tok, self.cache = self._admit_fn(S)(
+                self.params, self.cache, jnp.asarray(req.prompt[None]),
+                slot_dev, self._step_rng())
+        nxt = int(np.asarray(tok)[0])
         self.active[slot] = req
         self.positions[slot] = S
         self.remaining[slot] = req.max_new - 1
         self.tokens[slot] = nxt
+        self.active_mask[slot] = True
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
         self.outputs[req.rid] = [nxt]
-        req.first_token_s = now
+        req.admit_step = int(now)
+        req.first_token_s = time.perf_counter() - self._wall0
+        self._dirty = True
+        if self.remaining[slot] == 0:   # max_new == 1: prefill token only
+            self._release(slot, now)
+        return True
 
     def _release(self, slot: int, now: float):
         req = self.active[slot]
-        req.done_s = now
+        req.done_s = time.perf_counter() - self._wall0
+        req.done_step = int(now)
         req.output = np.asarray(self.outputs[req.rid], np.int32)
         self.active[slot] = None
+        self.active_mask[slot] = False
         self.remaining[slot] = 0
+        self._admit_seq[slot] = -1
+        if self.alloc is not None:
+            self.alloc.free(slot)
+            self._sync_table()
+        self._dirty = True
+
+    # -- preemption ----------------------------------------------------------
+
+    def _preempt_youngest(self) -> bool:
+        """Evict the most recently admitted active request (vLLM-style
+        last-come-first-preempted), requeue it for recompute-from-scratch.
+        Returns False when nothing is evictable."""
+        live = [s for s in range(self.slots) if self.active_mask[s]]
+        if not live:
+            return False
+        victim = max(live, key=lambda s: self._admit_seq[s])
+        req = self.active[victim]
+        req.preempted += 1
+        del self.outputs[req.rid]
+        self.active[victim] = None
+        self.active_mask[victim] = False
+        self.remaining[victim] = 0
+        self._admit_seq[victim] = -1
+        self.alloc.preempt(victim)
+        self._sync_table()
+        self._requeue.append(req)
+        self._dirty = True
+        return True
+
+    def _ensure_growth(self, slot: int) -> None:
+        """Pre-step invariant: blocks cover the next write position.  On
+        OOM, preempt youngest-first until the growth fits (the growing slot
+        itself may be the victim)."""
+        while not self.alloc.ensure(slot, int(self.positions[slot]) + 1):
+            victim_ok = self._preempt_youngest()
+            if not self.active_mask[slot]:
+                return  # we evicted ourselves
+            if not victim_ok:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single request; "
+                    "raise n_blocks")
+        self._sync_table()
+
+    # -- one engine step -----------------------------------------------------
 
     def step(self, now: float):
-        """One decode step over all active slots."""
-        if not any(a is not None for a in self.active):
+        """One decode step over all slots (no-op when none active)."""
+        if not self.active_mask.any():
             return
-        logits, self.cache = self._decode_jit(
-            self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.positions))
-        nxt = np.asarray(jnp.argmax(
-            logits[:, :self.cfg.vocab_size].astype(jnp.float32), axis=-1),
-            np.int32)
+        if self.alloc is not None:
+            for s in range(self.slots):
+                # growth only at block boundaries: next write position is
+                # positions[s], covered unless it opens a fresh block
+                if self.active_mask[s] \
+                        and self.positions[s] % self.block_size == 0:
+                    self._ensure_growth(s)
+        occ = int(self.positions[self.active_mask].sum()) + \
+            int(self.active_mask.sum())
+        self._peak_occupied = max(self._peak_occupied, occ)
+        if self._dirty:
+            self._push_state()
+        was_active = self.active_mask.copy()
+        emitted, done, self._state, self.cache = self._serve(
+            self.params, self.cache, self._state, self._step_rng())
+        emitted = np.asarray(emitted)
+        done = np.asarray(done)
+        self.steps_run += 1
         for s in range(self.slots):
-            if self.active[s] is None:
+            if not was_active[s]:
                 continue
-            self.outputs[self.active[s].rid].append(int(nxt[s]))
-            self.tokens[s] = nxt[s]
+            self.outputs[self.active[s].rid].append(int(emitted[s]))
+            self.tokens[s] = emitted[s]
             self.positions[s] += 1
             self.remaining[s] -= 1
-            if self.remaining[s] <= 0 or \
-                    self.positions[s] >= self.s_max - 1:
+            if self.alloc is not None:
+                self.alloc.note_usage(s, int(self.positions[s]))
+            if done[s]:
                 self._release(s, now)
+
+    # -- trace replay --------------------------------------------------------
 
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
@@ -116,18 +358,91 @@ class ContinuousBatcher:
         waiting = sorted(requests, key=lambda r: r.arrival_s)
         qi = 0
         now = 0.0
+        if not self.active_mask.any() and not self._requeue:
+            # fresh replay on a drained batcher: reset per-run accounting
+            # so metrics() reflects this trace only
+            self.steps_run = 0
+            self._peak_occupied = 0
+            self.outputs = {}
+            if self.alloc is not None:
+                self.alloc.reset_stats()
+        self._wall0 = time.perf_counter()
         for _ in range(max_steps):
-            # admit arrivals into free slots
+            # admit preempted requests first, then due arrivals
             for s in range(self.slots):
-                if self.active[s] is None and qi < len(waiting) and \
-                        waiting[qi].arrival_s <= now:
-                    self._admit(s, waiting[qi], now)
-                    qi += 1
-            if qi >= len(waiting) and all(a is None for a in self.active):
+                if self.active[s] is not None:
+                    continue
+                if self._requeue:
+                    if self._admit(s, self._requeue[0], now):
+                        self._requeue.pop(0)
+                    continue
+                if qi < len(waiting) and waiting[qi].arrival_s <= now:
+                    if self._admit(s, waiting[qi], now):
+                        qi += 1
+            if qi >= len(waiting) and not self._requeue \
+                    and all(a is None for a in self.active):
                 break
             self.step(now)
             now += 1.0  # logical step clock
+        self._wall_run = time.perf_counter() - self._wall0
         return requests
+
+    # -- metrics -------------------------------------------------------------
+
+    def defragment(self):
+        """Compact the physical block pool (paged only); applies the block
+        permutation to the device cache and uploads the rewritten table."""
+        if self.alloc is None:
+            return
+        perm = self.alloc.defragment()
+        if perm is None:
+            return
+        p = jnp.asarray(perm)
+        self.cache["k"] = jnp.take(self.cache["k"], p, axis=1)
+        self.cache["v"] = jnp.take(self.cache["v"], p, axis=1)
+        self._sync_table()
+
+    def metrics(self, requests: List[Request]) -> ServeMetrics:
+        done = [r for r in requests if r.output is not None]
+        wall = self._wall_run   # captured at run() drain, not call time
+        total_new = sum(len(r.output) for r in done)
+        step_s = wall / self.steps_run if self.steps_run else 0.0
+        # TTFT: queueing wait + the admission (prefill) tick.
+        ttft = [max(r.admit_step - r.arrival_s, 0.0) + 1.0 for r in done]
+        # TPOT over decode tokens only: a request admitted at step t decodes
+        # at steps t..done_step inclusive (admission and the first decode
+        # share a logical tick), i.e. done-admit+1 steps for len-1 tokens.
+        tpot = [(r.done_step - r.admit_step + 1) / (len(r.output) - 1)
+                for r in done if len(r.output) > 1]
+        if self.alloc is not None:
+            st = self.alloc.stats()
+            # peak footprint a right-sized deployment would have to reserve
+            peak_tok = st.peak_used_blocks * st.block_size
+            cap = (st.n_blocks - 1) * st.block_size
+            util = self._peak_occupied / peak_tok if peak_tok else 0.0
+            preempt = st.preemptions
+            cache_stats = st.to_dict()
+        else:
+            # dense reserves worst case up front regardless of occupancy
+            peak_tok = cap = self.slots * self.s_max
+            util = self._peak_occupied / cap if cap else 0.0
+            preempt = 0
+            cache_stats = None
+        return ServeMetrics(
+            requests=len(requests), completed=len(done),
+            total_new_tokens=total_new, steps=self.steps_run, wall_s=wall,
+            throughput_tok_s=total_new / wall if wall > 0 else 0.0,
+            ttft_steps_p50=_percentile(ttft, 50),
+            ttft_steps_p99=_percentile(ttft, 99),
+            tpot_steps_p50=_percentile(tpot, 50),
+            tpot_steps_p99=_percentile(tpot, 99),
+            ttft_s_p50=_percentile(ttft, 50) * step_s,
+            ttft_s_p99=_percentile(ttft, 99) * step_s,
+            tpot_s_p50=_percentile(tpot, 50) * step_s,
+            tpot_s_p99=_percentile(tpot, 99) * step_s,
+            preemptions=preempt, peak_kv_tokens=int(peak_tok),
+            kv_capacity_tokens=int(cap), cache_utilization=float(util),
+            cache_stats=cache_stats)
 
 
 def make_trace(n_requests: int, *, mean_in: int, mean_out: int,
@@ -149,4 +464,4 @@ def make_trace(n_requests: int, *, mean_in: int, mean_out: int,
     return reqs
 
 
-__all__ = ["ContinuousBatcher", "Request", "make_trace"]
+__all__ = ["ContinuousBatcher", "Request", "ServeMetrics", "make_trace"]

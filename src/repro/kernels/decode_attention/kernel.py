@@ -70,6 +70,114 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         window: int, block_size: int):
+    """Grid (B, Hq, max_blocks).  The KV refs are *physical-block* views:
+    the index_map below resolves logical block j of sequence b to physical
+    block tbl[b, j] via scalar prefetch, so the gather happens in the DMA
+    schedule — the logical (B, S, U, hd) view is never materialized in HBM.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+    k_pos = j * block_size + lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)[0]
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= k_pos > pos - window
+
+    # Skip logical blocks entirely beyond this sequence's position (their
+    # table entries may point at the trash block).
+    @pl.when(j * block_size <= pos)
+    def _compute():
+        q_vec = q_ref[0, 0].astype(jnp.float32)           # (hd,)
+        kb = k_ref[0, :, 0].astype(jnp.float32)           # (bs, hd)
+        vb = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            kb, q_vec, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bs,)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+        acc_ref[0] = acc_ref[0] * alpha + jax.lax.dot_general(
+            p, vb, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[0] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[0]
+                       / jnp.maximum(l_ref[0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "q_per_kv", "interpret"))
+def paged_decode_attention_call(q, k_phys, v_phys, block_tbl, positions, *,
+                                window: int, q_per_kv: int,
+                                interpret=False):
+    """Paged flash-decode: one query token per sequence attends over K/V
+    scattered across fixed-size physical blocks.
+
+    q: (B, Hq, hd); k_phys/v_phys: (n_blocks, block_size, Hkv, hd);
+    block_tbl: (B, max_blocks) int32 logical->physical; positions: (B,).
+    Returns (B, Hq, hd).
+
+    The block table and positions ride in SMEM as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``): each grid step (b, h, j) DMAs physical
+    block ``tbl[b, j]`` HBM->VMEM directly, so non-resident blocks cost
+    nothing and the KV working set per step is one (block_size, hd) tile.
+    Batch is *not* sublane-blocked (unlike the dense kernel): each
+    sequence's block list is independent, which trades sublane utilization
+    for zero logical-view materialization — the PagedAttention layout.
+    """
+    B, Hq, hd = q.shape
+    max_blocks = block_tbl.shape[1]
+    block_size = k_phys.shape[1]
+    grid = (B, Hq, max_blocks)
+    kern = functools.partial(_paged_decode_kernel, scale=hd ** -0.5,
+                             window=window, block_size=block_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, tbl, pos: (b, h, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda b, h, j, tbl, pos, qpk=q_per_kv:
+                         (tbl[b, j], 0, h // qpk, 0)),
+            pl.BlockSpec((1, block_size, 1, hd),
+                         lambda b, h, j, tbl, pos, qpk=q_per_kv:
+                         (tbl[b, j], 0, h // qpk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, h, j, tbl, pos: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tbl, positions, q, k_phys, v_phys)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "window", "q_per_kv", "block_b", "block_k", "interpret"))
 def decode_attention_call(q, k, v, positions, *, window: int,

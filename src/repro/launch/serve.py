@@ -1,11 +1,26 @@
 """Serving driver: batched generation or trace-replay continuous batching.
 
     python -m repro.launch.serve --arch llama3.2-1b --smoke --mode batch
-    python -m repro.launch.serve --arch rwkv6-7b --smoke --mode trace
+    python -m repro.launch.serve --arch llama3.2-1b --smoke --mode trace \
+        --block-size 8 --ar-strategy auto --overlap
+    python -m repro.launch.serve --arch llama3.2-1b --mode trace --tp 8 \
+        --pods 2 --block-size 8   # under XLA_FLAGS=...device_count=8
+
+Trace mode replays a BurstGPT-style synthetic trace through the
+continuous batcher (local path, or the mesh path when --tp > 1) and
+reports:
+
+  TTFT   time-to-first-token: queueing wait + prefill, per request
+  TPOT   time-per-output-token: decode cadence once generation started
+
+both as p50/p99 in logical engine steps (deterministic) and in wall
+seconds (steps x measured mean step time), plus cache utilization and
+preemption counts from the paged KV allocator.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -13,18 +28,49 @@ import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke, ARCH_IDS
+from ..core.pcontext import ParallelCtx, LOCAL, AR_STRATEGIES
 from ..models.transformer import make_plan, init_params
 from ..inference.engine import InferenceEngine
 from ..inference.scheduler import ContinuousBatcher, make_trace
 
 
+def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool):
+    """(mesh, ctx, tp_total) for the requested layout; local when tp == 1."""
+    ctx = LOCAL.replace(ar_strategy=ar_strategy, overlap_matmul=overlap)
+    if tp <= 1:
+        return None, ctx, 1
+    from ..core.compat import AxisType, make_mesh
+    if pods > 1:
+        if tp % pods:
+            raise SystemExit(f"--tp {tp} not divisible by --pods {pods}")
+        mesh = make_mesh((pods, tp // pods), ("pod", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        ctx = ctx.replace(tp_fast=("model",), tp_slow=("pod",),
+                          ep=("model",))
+    else:
+        mesh = make_mesh((tp,), ("model",), axis_types=(AxisType.Auto,))
+        ctx = ctx.replace(tp_fast=("model",), ep=("model",))
+    return mesh, ctx, tp
+
+
 def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
               prompt_len: int = 16, max_new: int = 16,
-              ar_strategy: str = "flat", seed: int = 0):
+              ar_strategy: str = "flat", ar_table=None, overlap: bool = False,
+              temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+              tp: int = 1, pods: int = 1, block_size: int = 0):
     cfg = get_smoke(arch) if smoke else get_config(arch)
-    ap = make_plan(cfg, 1)
+    if block_size and tp > 1:
+        raise SystemExit("--block-size with --mode batch is local-path "
+                         "only (use --mode trace for mesh-path paging)")
+    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap)
+    ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
-    eng = InferenceEngine(ap, params, s_max=prompt_len + max_new + 8)
+    s_max = prompt_len + max_new + 8
+    if block_size:
+        s_max = -(-s_max // block_size) * block_size
+    eng = InferenceEngine(ap, params, ctx=ctx, mesh=mesh, s_max=s_max,
+                          temperature=temperature, top_k=top_k, seed=seed,
+                          block_size=block_size, ar_table=ar_table)
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
     extra = {}
@@ -37,31 +83,59 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
             rng.standard_normal((batch, cfg.n_patches, cfg.d_model)),
             cfg.dtype)
     res = eng.generate(prompts, max_new, extra=extra)
+    layout = f"paged(bs={block_size})" if block_size else "dense"
     print(f"[serve] {arch}: batch {batch} prompt {prompt_len} "
-          f"new {max_new} | prefill {res.prefill_s*1e3:.0f}ms "
+          f"new {max_new} ar={ar_strategy} tp={tp} {layout} "
+          f"| prefill {res.prefill_s*1e3:.0f}ms "
           f"decode {res.decode_s*1e3:.0f}ms "
           f"({res.decode_tokens_per_s:.0f} tok/s)")
     return res
 
 
 def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
-              slots: int = 4, seed: int = 0):
+              slots: int = 4, s_max: int = 128, block_size: int = 0,
+              n_blocks=None, ar_strategy: str = "flat", ar_table=None,
+              overlap: bool = False, temperature: float = 0.0,
+              top_k: int = 0, seed: int = 0, tp: int = 1, pods: int = 1,
+              admit_mode: str = "full", admit_chunk: int = 32,
+              mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
+              json_out=None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
-    ap = make_plan(cfg, 1)
+    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap)
+    ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
-    sched = ContinuousBatcher(ap, params, slots=slots, s_max=128)
-    reqs = make_trace(n_requests, mean_in=12, mean_out=10, rate=2.0,
-                      vocab=cfg.vocab_size, seed=seed)
-    t0 = time.perf_counter()
+    sched = ContinuousBatcher(
+        ap, params, slots=slots, s_max=s_max, ctx=ctx, mesh=mesh,
+        block_size=block_size, n_blocks=n_blocks, ar_table=ar_table,
+        temperature=temperature, top_k=top_k, seed=seed,
+        admit_mode=admit_mode, admit_chunk=admit_chunk)
+    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, vocab=cfg.vocab_size, seed=seed)
     done = sched.run(reqs)
-    dt = time.perf_counter() - t0
-    total_out = sum(len(r.output) for r in done if r.output is not None)
     assert all(r.output is not None for r in done), "requests dropped!"
-    print(f"[serve] trace: {len(done)} reqs, {total_out} tokens "
-          f"in {dt:.1f}s wall ({total_out/dt:.0f} tok/s, slots={slots})")
-    return done
+    m = sched.metrics(done)
+    layout = f"paged(bs={block_size})" if sched.paged else "dense"
+    print(f"[serve] trace {arch} [{layout} ar={ar_strategy} tp={tp}"
+          f"{' overlap' if overlap else ''}]: "
+          f"{m.completed}/{m.requests} reqs, {m.total_new_tokens} tokens "
+          f"in {m.wall_s:.1f}s ({m.throughput_tok_s:.0f} tok/s, "
+          f"slots={slots}, {m.steps} steps)")
+    print(f"[serve]   TTFT p50/p99: {m.ttft_steps_p50:.1f}/"
+          f"{m.ttft_steps_p99:.1f} steps = {m.ttft_s_p50*1e3:.0f}/"
+          f"{m.ttft_s_p99*1e3:.0f} ms | TPOT p50/p99: "
+          f"{m.tpot_steps_p50:.2f}/{m.tpot_steps_p99:.2f} steps = "
+          f"{m.tpot_s_p50*1e3:.1f}/{m.tpot_s_p99*1e3:.1f} ms")
+    print(f"[serve]   KV peak {m.peak_kv_tokens} tokens of "
+          f"{m.kv_capacity_tokens} reserved "
+          f"(util {m.cache_utilization:.2f}), "
+          f"{m.preemptions} preemptions")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(m.to_dict(), f, indent=2, default=float)
+        print(f"[serve]   metrics -> {json_out}")
+    return done, m
 
 
 def main(argv=None):
@@ -75,13 +149,48 @@ def main(argv=None):
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--requests", type=int, default=12)
     p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--s-max", type=int, default=128)
+    p.add_argument("--block-size", type=int, default=0,
+                   help="paged KV block size (0 = dense layout)")
+    p.add_argument("--n-blocks", type=int, default=None,
+                   help="physical block pool size (default: full capacity)")
+    p.add_argument("--ar-strategy", choices=list(AR_STRATEGIES),
+                   default="flat")
+    p.add_argument("--ar-table", default=None,
+                   help="persisted autotune table for --ar-strategy auto")
+    p.add_argument("--overlap", action="store_true",
+                   help="overlapped collective-matmul decode path")
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor-parallel ways (mesh path when > 1)")
+    p.add_argument("--pods", type=int, default=1,
+                   help="split --tp across this many pods (slow axis)")
+    p.add_argument("--admit-mode", choices=["full", "chunked"],
+                   default="full")
+    p.add_argument("--admit-chunk", type=int, default=32)
+    p.add_argument("--rate", type=float, default=2.0)
+    p.add_argument("--json", dest="json_out", default=None,
+                   help="write trace metrics JSON here")
     args = p.parse_args(argv)
     if args.mode == "batch":
         run_batch(args.arch, smoke=args.smoke, batch=args.batch,
-                  prompt_len=args.prompt_len, max_new=args.max_new)
+                  prompt_len=args.prompt_len, max_new=args.max_new,
+                  ar_strategy=args.ar_strategy, ar_table=args.ar_table,
+                  overlap=args.overlap, temperature=args.temperature,
+                  top_k=args.top_k, seed=args.seed, tp=args.tp,
+                  pods=args.pods, block_size=args.block_size)
     else:
         run_trace(args.arch, smoke=args.smoke, n_requests=args.requests,
-                  slots=args.slots)
+                  slots=args.slots, s_max=args.s_max,
+                  block_size=args.block_size, n_blocks=args.n_blocks,
+                  ar_strategy=args.ar_strategy, ar_table=args.ar_table,
+                  overlap=args.overlap, temperature=args.temperature,
+                  top_k=args.top_k, seed=args.seed, tp=args.tp,
+                  pods=args.pods, admit_mode=args.admit_mode,
+                  admit_chunk=args.admit_chunk, rate=args.rate,
+                  json_out=args.json_out)
     return 0
 
 

@@ -277,7 +277,8 @@ def attention_decode(p: Params, h: jax.Array, cache: Dict[str, jax.Array],
                      positions: jax.Array,
                      q_mask_tbl: Optional[np.ndarray] = None,
                      chunk: Optional[int] = None, ring: bool = False,
-                     project: bool = True
+                     project: bool = True,
+                     block_tbl: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode step against a KV cache.
 
@@ -289,13 +290,26 @@ def attention_decode(p: Params, h: jax.Array, cache: Dict[str, jax.Array],
     h: (B, 1, D); cache['k']/cache['v']: (B, S_max, U, hd);
     positions: (B,) index where the new token is written.
 
-    Variants (both selected by the cache layout itself):
+    Variants (all selected by the cache layout itself):
     * int8 KV: cache['k'] is int8 with per-(pos, head) bf16 scales in
       cache['k_scale']/['v_scale'] — K/V are dequantized chunk-by-chunk.
     * ring buffer: ``ring=True`` with S_max == sliding_window — slot
       ``pos % W`` is overwritten and every slot is one of the last W
       positions, so the sliding-window mask degenerates to slot-validity.
+    * paged: ``block_tbl`` (B, max_blocks) int32 maps logical blocks to
+      physical blocks of cache['k'] (n_blocks, block_size, U, hd); the new
+      token scatters through the table and K/V are gathered back to the
+      logical (B, max_blocks*block_size, U, hd) layout before attention, so
+      the math is identical to the dense path on the same logical contents.
     """
+    if block_tbl is not None:
+        assert not ring, "paged cache is incompatible with the ring buffer"
+        assert cache["k"].dtype != jnp.int8, \
+            "paged cache is incompatible with int8 KV"
+        return _attention_decode_paged(p, h, cache, cfg, plan, ctx,
+                                       positions=positions,
+                                       q_mask_tbl=q_mask_tbl, chunk=chunk,
+                                       project=project, block_tbl=block_tbl)
     q, k_new, v_new = _qkv(p, h, plan)
     if cfg.rope_theta > 0:
         cos, sin = rope_tables(positions[:, None], cfg.head_dim,
@@ -345,6 +359,129 @@ def attention_decode(p: Params, h: jax.Array, cache: Dict[str, jax.Array],
         new_cache["k_scale"] = k_scale
         new_cache["v_scale"] = v_scale
     return out, new_cache
+
+
+def _attention_decode_paged(p: Params, h: jax.Array,
+                            cache: Dict[str, jax.Array], cfg: ModelConfig,
+                            plan: GQAPlan, ctx: ParallelCtx, *,
+                            positions: jax.Array, q_mask_tbl, chunk,
+                            project: bool, block_tbl: jax.Array):
+    """Paged one-token decode: scatter the new K/V through the block table,
+    gather the logical view, then attend exactly like the dense path.
+
+    Table rows of inactive slots point at the reserved trash block (0);
+    their writes land there and their reads are discarded by the caller, so
+    the whole fixed-shape batch keeps stepping without masking."""
+    q, k_new, v_new = _qkv(p, h, plan)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_tables(positions[:, None], cfg.head_dim,
+                               cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    B = h.shape[0]
+    bs_blk = cache["k"].shape[1]
+    S_max = block_tbl.shape[1] * bs_blk
+    bidx = jnp.arange(B)
+    pb = block_tbl[bidx, positions // bs_blk]        # (B,) physical block
+    off = positions % bs_blk
+    k = cache["k"].at[pb, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[pb, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    U, hd = k.shape[-2], k.shape[-1]
+    k_log = k[block_tbl].reshape(B, S_max, U, hd)
+    v_log = v[block_tbl].reshape(B, S_max, U, hd)
+    kpos = jnp.arange(S_max, dtype=jnp.int32)
+    mask = _mask(positions[:, None], kpos, causal=True,
+                 window=cfg.sliding_window)
+    if chunk is None:
+        chunk = 1024 if S_max > 8192 else 0
+    o = attn_core(q, k_log, v_log, mask, plan.g, chunk=chunk)
+    if q_mask_tbl is not None:
+        o = o * take_local(q_mask_tbl, ctx)[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"]) if project else o
+    return out, {"k": k, "v": v}
+
+
+def attention_chunk_step(p: Params, h: jax.Array,
+                         cache: Dict[str, jax.Array], cfg: ModelConfig,
+                         plan: GQAPlan, ctx: ParallelCtx, *,
+                         positions: jax.Array,
+                         q_mask_tbl: Optional[np.ndarray] = None,
+                         chunk: int = 0, project: bool = True,
+                         block_tbl: Optional[jax.Array] = None,
+                         slot: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention: C prompt tokens write into the decode
+    cache, then attend causally over everything written so far.
+
+    h: (B, C, D); positions: (B, C) int32 write positions.  ``slot`` (a
+    traced scalar) admits a single request (B == 1) into one row of a
+    batch-wide cache — the on-device splice the continuous batcher's
+    admission step uses.  Dense and paged (``block_tbl``) layouts share the
+    call; the paged path scatters/gathers through the table first.
+
+    Trailing pad tokens are safe *by the write-ordering invariant*: a pad at
+    position p >= prompt_len writes garbage K/V, but every later read at
+    decode position q only exposes kpos <= q, and position q is overwritten
+    by the real decode write before any such read (see DESIGN.md §7).
+    """
+    q, k_new, v_new = _qkv(p, h, plan)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    B = h.shape[0]
+    paged = block_tbl is not None
+    if paged:
+        assert cache["k"].dtype != jnp.int8
+        bs_blk = cache["k"].shape[1]
+        S_max = block_tbl.shape[1] * bs_blk
+    else:
+        S_max = cache["k"].shape[1]
+    kd = cache["k"].dtype
+    if slot is not None:
+        assert B == 1, "slot admission is per-request"
+        pos_row = positions[0]                       # (C,)
+        if paged:
+            row = lax.dynamic_index_in_dim(block_tbl, slot, 0,
+                                           keepdims=False)  # (max_blocks,)
+            # pads beyond the logical capacity must not clamp into the
+            # slot's last live block — route them to the trash block (0)
+            pb = jnp.where(pos_row < S_max, row[jnp.minimum(
+                pos_row // bs_blk, block_tbl.shape[1] - 1)], 0)
+            off = pos_row % bs_blk
+            k = cache["k"].at[pb, off].set(k_new[0].astype(kd))
+            v = cache["v"].at[pb, off].set(v_new[0].astype(kd))
+            U, hd = k.shape[-2], k.shape[-1]
+            k_att = k[row].reshape(1, S_max, U, hd)
+            v_att = v[row].reshape(1, S_max, U, hd)
+        else:
+            k = cache["k"].at[slot, pos_row].set(k_new[0].astype(kd))
+            v = cache["v"].at[slot, pos_row].set(v_new[0].astype(kd))
+            k_att = lax.dynamic_index_in_dim(k, slot, 0, keepdims=True)
+            v_att = lax.dynamic_index_in_dim(v, slot, 0, keepdims=True)
+    else:
+        bidx = jnp.arange(B)[:, None]
+        if paged:
+            pb = block_tbl[bidx, jnp.minimum(positions // bs_blk,
+                                             block_tbl.shape[1] - 1)]
+            pb = jnp.where(positions < S_max, pb, 0)     # (B, C)
+            off = positions % bs_blk
+            k = cache["k"].at[pb, off].set(k_new.astype(kd))
+            v = cache["v"].at[pb, off].set(v_new.astype(kd))
+            U, hd = k.shape[-2], k.shape[-1]
+            k_att = k[block_tbl].reshape(B, S_max, U, hd)
+            v_att = v[block_tbl].reshape(B, S_max, U, hd)
+        else:
+            k = cache["k"].at[bidx, positions].set(k_new.astype(kd))
+            v = cache["v"].at[bidx, positions].set(v_new.astype(kd))
+            k_att, v_att = k, v
+    kpos = jnp.arange(S_max, dtype=jnp.int32)
+    mask = _mask(positions, kpos, causal=True, window=cfg.sliding_window)
+    o = attn_core(q, k_att, v_att, mask, plan.g, chunk=chunk)
+    if q_mask_tbl is not None:
+        o = o * take_local(q_mask_tbl, ctx)[None, None, :, None].astype(o.dtype)
+    out = jnp.einsum("bsqh,qhd->bsd", o, p["wo"]) if project else o
+    return out, {"k": k, "v": v}
 
 
 def cross_attention(p: Params, h: jax.Array, enc_k: jax.Array,
@@ -550,6 +687,7 @@ def sample_token(logits: jax.Array, rng: jax.Array, *,
 __all__ = [
     "rms_norm", "layer_norm", "apply_norm", "init_norm", "rope_tables",
     "apply_rope", "init_attention", "attention", "attention_decode",
+    "attention_chunk_step",
     "cross_attention", "cross_kv", "attn_core", "init_mlp", "mlp",
     "mlp_hidden", "mlp_down_w",
     "init_embed", "embed_lookup", "lm_logits", "sharded_xent",

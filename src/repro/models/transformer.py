@@ -418,12 +418,24 @@ def forward_lm(params: Params, tokens, ap: ArchPlan, ctx: ParallelCtx, *,
 
 def init_cache(ap: ArchPlan, batch: int, s_max: int,
                local: bool = True, *, kv_quant: bool = False,
-               window_cache: bool = False) -> Params:
+               window_cache: bool = False, block_size: int = 0,
+               n_blocks: Optional[int] = None) -> Params:
     """Decode cache pytree, leading layer axis.  ``local`` shapes are
     per-device (tp already divided out); global shapes otherwise.
 
     kv_quant: int8 K/V payloads + per-(pos, head) bf16 scales.
     window_cache: ring buffer of size sliding_window (SWA archs only).
+    block_size > 0: *paged* K/V layout — physical blocks
+    (L, n_blocks, block_size, u, hd) plus an int32 logical->physical
+    ``block_tbl`` (batch, s_max // block_size).  ``block_size=0`` is the
+    dense (batch, s_max) layout, the bit-parity degenerate case.  When
+    ``n_blocks`` is None the pool holds every slot at full length plus the
+    reserved trash block 0, and the table starts as the identity mapping
+    (dense-equivalent without an allocator); a smaller explicit pool starts
+    all-trash and must be managed by a
+    :class:`repro.inference.kv_cache.BlockAllocator`.  Paging applies to
+    the self-attention K/V only; recurrent / encoder leaves are tiny,
+    fixed-size per-slot states and stay batch-indexed.
     """
     cfg = ap.cfg
     tp = 1 if local else ap.tp
@@ -437,8 +449,27 @@ def init_cache(ap: ArchPlan, batch: int, s_max: int,
         hd = cfg.head_dim
         if cfg.family != "ssm":
             kv_dt = jnp.int8 if kv_quant else cfg.dtype
-            c["k"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
-            c["v"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
+            if block_size > 0:
+                assert not kv_quant and not window_cache, \
+                    "paged cache is incompatible with kv_quant/window_cache"
+                assert s_max % block_size == 0, (s_max, block_size)
+                max_blocks = s_max // block_size
+                if n_blocks is None:
+                    n_blocks = batch * max_blocks + 1
+                c["k"] = jnp.zeros((Ldec, n_blocks, block_size, u, hd),
+                                   kv_dt)
+                c["v"] = jnp.zeros((Ldec, n_blocks, block_size, u, hd),
+                                   kv_dt)
+                if n_blocks >= batch * max_blocks + 1:
+                    c["block_tbl"] = 1 + jnp.arange(
+                        batch * max_blocks,
+                        dtype=jnp.int32).reshape(batch, max_blocks)
+                else:
+                    c["block_tbl"] = jnp.zeros((batch, max_blocks),
+                                               jnp.int32)
+            else:
+                c["k"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
+                c["v"] = jnp.zeros((Ldec, batch, s_max, u, hd), kv_dt)
             if kv_quant:
                 c["k_scale"] = jnp.zeros((Ldec, batch, s_max, u),
                                          jnp.bfloat16)
@@ -464,10 +495,79 @@ def init_cache(ap: ArchPlan, batch: int, s_max: int,
     return c
 
 
+def _paged_splice(phys, states, block_tbl, slot):
+    """Scatter prefill K/V states (L, B, S, U, hd) into the physical block
+    pool (L, n_blocks, bs, U, hd) through the block table.  The trailing
+    partial block is zero-padded; those positions are overwritten by decode
+    writes before any unmasked read (same invariant as chunk padding)."""
+    Ldec, B, S, u, hd = states.shape
+    bs = phys.shape[2]
+    nb = -(-S // bs)
+    pad = nb * bs - S
+    upd = states.astype(phys.dtype)
+    if pad:
+        upd = jnp.pad(upd, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    upd = upd.reshape(Ldec, B, nb, bs, u, hd)
+    if slot is None:
+        tgt = block_tbl[:, :nb]                       # (B, nb)
+        return phys.at[:, tgt].set(upd)
+    row = lax.dynamic_index_in_dim(block_tbl, slot, 0, keepdims=False)
+    return phys.at[:, row[:nb]].set(upd[:, 0])
+
+
+def seed_cache(cache: Params, states: Params, *, slot=None,
+               enc_kv: Optional[Tuple[Any, Any]] = None) -> Params:
+    """Splice prefill-collected layer states into a decode cache.
+
+    The one shared cache-splice: the engine's local prefill, the mesh
+    prefill builder and the continuous batcher's admission step all route
+    through here (they used to carry three copies of this logic).
+
+    ``slot=None``: batch-wide splice (states batch == cache batch), written
+    at position 0.  ``slot`` (traced scalar ok): single-request splice
+    (states batch == 1) into that cache row.  Paged caches
+    (``cache['block_tbl']`` present) route K/V through the block table.
+    ``enc_kv``: (enc_k, enc_v) per-layer cross-attention K/V for enc-dec.
+    """
+    out = dict(cache)
+    if "k" in cache:
+        if "block_tbl" in cache:
+            out["k"] = _paged_splice(cache["k"], states["k"],
+                                     cache["block_tbl"], slot)
+            out["v"] = _paged_splice(cache["v"], states["v"],
+                                     cache["block_tbl"], slot)
+        else:
+            idx0 = (0, 0, 0, 0, 0) if slot is None else (0, slot, 0, 0, 0)
+            out["k"] = lax.dynamic_update_slice(
+                cache["k"], states["k"].astype(cache["k"].dtype), idx0)
+            out["v"] = lax.dynamic_update_slice(
+                cache["v"], states["v"].astype(cache["v"].dtype), idx0)
+    for nm in ("conv", "ssm", "shift_tm", "shift_cm", "wkv"):
+        if nm in cache:
+            upd = states[nm].astype(cache[nm].dtype)
+            if slot is None:
+                out[nm] = upd
+            else:
+                idx = (0, slot) + (0,) * (cache[nm].ndim - 2)
+                out[nm] = lax.dynamic_update_slice(cache[nm], upd, idx)
+    if enc_kv is not None and "enc_k" in cache:
+        ek, ev = enc_kv
+        if slot is None:
+            out["enc_k"] = ek.astype(cache["enc_k"].dtype)
+            out["enc_v"] = ev.astype(cache["enc_v"].dtype)
+        else:
+            idx = (0, slot, 0, 0, 0)
+            out["enc_k"] = lax.dynamic_update_slice(
+                cache["enc_k"], ek.astype(cache["enc_k"].dtype), idx)
+            out["enc_v"] = lax.dynamic_update_slice(
+                cache["enc_v"], ev.astype(cache["enc_v"].dtype), idx)
+    return out
+
+
 def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
                  ctx: ParallelCtx, *, positions,
-                 attn_chunk=None, kv_ring: bool = False
-                 ) -> Tuple[Any, Params]:
+                 attn_chunk=None, kv_ring: bool = False,
+                 block_tbl=None) -> Tuple[Any, Params]:
     """One block, one token.  x: (B,1,D) replicated; cache_l: this layer's
     cache slice.  Returns (x, new_cache_l).  Every sublayer output is a
     TP-partial reduced by tp_all_reduce — the collective the paper targets.
@@ -502,7 +602,8 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
     attn_out, kv_new = L.attention_decode(
         bp["attn"], h, kv_in, cfg, ap.gqa,
         ctx, positions=positions, q_mask_tbl=ap.q_mask_tbl,
-        chunk=attn_chunk, ring=kv_ring, project=hybrid)
+        chunk=attn_chunk, ring=kv_ring, project=hybrid,
+        block_tbl=block_tbl)
     new_c.update(kv_new)
     if hybrid:
         so, st = S.ssm_step(bp["ssm"], h, {"conv": cache_l["conv"],
@@ -542,8 +643,15 @@ def decode_step(params: Params, cache: Params, tokens, positions,
 
     tokens: (B,) int32; positions: (B,) write index.  Returns
     (logits_local (B, V_loc), new_cache).
+
+    A paged cache (``cache['block_tbl']`` present) routes K/V writes/reads
+    through the table; the table itself has no layer axis, so it rides
+    outside the layer scan and is returned unchanged.
     """
     cfg = ap.cfg
+    block_tbl = cache.get("block_tbl") if isinstance(cache, dict) else None
+    if block_tbl is not None:
+        cache = {k2: v for k2, v in cache.items() if k2 != "block_tbl"}
     x = L.embed_lookup(params["embed"], tokens[:, None], ctx, ap.vocab_pad)
 
     def body(x, inp):
@@ -551,7 +659,8 @@ def decode_step(params: Params, cache: Params, tokens, positions,
         if layer_map is not None:
             bp = layer_map(bp)
         x, nc = block_decode(bp, x, cl, ap, ctx, positions=positions,
-                             attn_chunk=attn_chunk, kv_ring=kv_ring)
+                             attn_chunk=attn_chunk, kv_ring=kv_ring,
+                             block_tbl=block_tbl)
         return x, nc
 
     if scan_layers:
@@ -565,11 +674,82 @@ def decode_step(params: Params, cache: Params, tokens, positions,
             ncs.append(nc)
         new_cache = _stack(ncs)
 
+    if block_tbl is not None:
+        new_cache["block_tbl"] = block_tbl
     x = L.apply_norm(x, params["final_norm"], cfg)
     logits = L.lm_logits(params["embed"], x)[:, 0]
     return logits, new_cache
 
 
+def prefill_chunk(params: Params, cache: Params, tokens, positions,
+                  ap: ArchPlan, ctx: ParallelCtx, *,
+                  scan_layers: bool = True, layer_map=None,
+                  attn_chunk: int = 0, slot=None,
+                  return_logits: bool = True):
+    """Chunked prefill: run C prompt tokens against the decode cache.
+
+    tokens: (B, C) int32; positions: (B, C) write positions.  Returns
+    (logits_local (B, C, V_loc), new_cache).  With ``slot`` (traced scalar),
+    B must be 1 and the chunk is spliced into that row of a batch-wide
+    cache — the continuous batcher's jitted admission step, replacing the
+    host-side ``dynamic_update_slice`` round trips.
+    ``return_logits=False`` skips the final norm + vocab head entirely
+    (logits come back None) — intermediate chunks only feed the cache.
+
+    Attention-only families (dense) only: recurrent states (ssm/hybrid/
+    rwkv) advance token-by-token and cannot skip pad tokens, and MoE
+    routing capacity is load-dependent, so those families admit via the
+    full-prefill path instead (see ``parallel.steps.build_admit_step``).
+    """
+    cfg = ap.cfg
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            f"chunked prefill supports attention-only dense families, "
+            f"not {cfg.family!r}")
+    if "k_scale" in cache:
+        raise NotImplementedError("chunked prefill with kv_quant")
+    block_tbl = cache.get("block_tbl")
+    kv_cache = {k2: v for k2, v in cache.items() if k2 != "block_tbl"}
+    x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad)
+
+    def body(x, inp):
+        bp, cl = inp
+        if layer_map is not None:
+            bp = layer_map(bp)
+        h = L.apply_norm(x, bp["ln1"], cfg)
+        # Same residual idiom as block_decode: unprojected attention output
+        # through _residual_proj (overlapped when ctx asks for it).
+        attn_out, kv_new = L.attention_chunk_step(
+            bp["attn"], h, cl, cfg, ap.gqa, ctx, positions=positions,
+            q_mask_tbl=ap.q_mask_tbl, chunk=attn_chunk,
+            project=False, block_tbl=block_tbl, slot=slot)
+        x = _residual_proj(x, attn_out, bp["attn"]["wo"],
+                           "bsqh,qhd->bsd", ctx, sp=False)
+        h2 = L.apply_norm(x, bp["ln2"], cfg)
+        x = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2, cfg),
+                           L.mlp_down_w(bp["mlp"], cfg), "bsf,fd->bsd",
+                           ctx, sp=False)
+        return x, kv_new
+
+    if scan_layers:
+        x, new_cache = lax.scan(body, x, (params["blocks"], kv_cache))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            cl = jax.tree.map(lambda t: t[i], kv_cache)
+            x, nc = body(x, (bp, cl))
+            ncs.append(nc)
+        new_cache = _stack(ncs)
+    if block_tbl is not None:
+        new_cache["block_tbl"] = block_tbl
+    if not return_logits:
+        return None, new_cache
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = L.lm_logits(params["embed"], x)
+    return logits, new_cache
+
+
 __all__ = ["ArchPlan", "make_plan", "init_params", "init_cache",
-           "forward_lm", "decode_step", "block_forward", "block_decode",
-           "encoder_forward"]
+           "forward_lm", "decode_step", "prefill_chunk", "seed_cache",
+           "block_forward", "block_decode", "encoder_forward"]

@@ -179,14 +179,27 @@ def gather_params(layer_params, fsdp_dims, ctx: ParallelCtx):
 
 
 def cache_spec(cache, ctx: ParallelCtx):
-    """Decode-cache specs: batch over dp axes, head/channel dims over TP."""
+    """Decode-cache specs: batch over dp axes, head/channel dims over TP.
+
+    A *paged* cache (``block_tbl`` present) shards its physical K/V blocks
+    on the head dim only: the block pool is a shared resource indexed by a
+    host-managed table, so the block dim cannot ride a batch axis (serving
+    replicas are separate processes, not dp shards).
+    """
     tp = ctx.tp_slow + ctx.tp_fast
     tp_s = tp if len(tp) > 1 else (tp[0] if tp else None)
     dp = ctx.dp if len(ctx.dp) > 1 else (ctx.dp[0] if ctx.dp else None)
+    paged = isinstance(cache, dict) and "block_tbl" in cache
+    if paged and dp is not None:
+        raise ValueError("paged cache cannot shard slots over dp axes")
 
     def f(path, leaf):
         name = _path_names(path)[-1]
         nd = leaf.ndim
+        if name == "block_tbl":                     # (slots, max_blocks)
+            return P(None, None)
+        if paged and name in ("k", "v"):            # (L,nb,bs,U,hd)
+            return P(None, None, None, tp_s, None)
         if name in ("k", "v", "enc_k", "enc_v"):   # (L,B,S,U,hd)
             return P(None, dp, None, tp_s, None)
         if name in ("k_scale", "v_scale"):          # (L,B,S,U)

@@ -24,11 +24,11 @@ from jax import lax
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 from ..core.compat import shard_map
-from ..core.pcontext import ParallelCtx
+from ..core.pcontext import ParallelCtx, LOCAL
 from ..core import autotune
 from ..core import hierarchical as hier
 from ..models.transformer import (ArchPlan, forward_lm, decode_step,
-                                  init_cache)
+                                  init_cache, prefill_chunk, seed_cache)
 from ..models import layers as L
 from ..training.optimizer import (adamw_init, adamw_update, cosine_lr,
                                   global_grad_norm)
@@ -343,24 +343,13 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                 scan_layers=scan_layers, collect_state=True,
                 layer_map=layer_map, chunk=chunk, **kw)
         cache = init_cache(ap, B, s_max, local=True)
-        # seed the cache from prefill states
-        if "k" in cache:
-            cache["k"] = lax.dynamic_update_slice(
-                cache["k"], states["k"].astype(cache["k"].dtype),
-                (0, 0, 0, 0, 0))
-            cache["v"] = lax.dynamic_update_slice(
-                cache["v"], states["v"].astype(cache["v"].dtype),
-                (0, 0, 0, 0, 0))
-        for nm in ("conv", "ssm", "shift_tm", "shift_cm", "wkv"):
-            if nm in cache:
-                cache[nm] = states[nm].astype(cache[nm].dtype)
+        enc_kv = None
         if cfg.enc_layers:
             def xkv(bp):
                 # xattn is never FSDP-sharded (see sharding._leaf_plan)
                 return L.cross_kv(bp["xattn"], enc_out)
-            ek, ev = jax.vmap(xkv)(params["blocks"])
-            cache["enc_k"] = ek.astype(cache["enc_k"].dtype)
-            cache["enc_v"] = ev.astype(cache["enc_v"].dtype)
+            enc_kv = jax.vmap(xkv)(params["blocks"])
+        cache = seed_cache(cache, states, enc_kv=enc_kv)
         nxt = L.greedy_sample(logits[:, -1], serve_ctx, cfg.vocab_size)
         return nxt, cache
 
@@ -381,5 +370,256 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                      mesh=mesh, ctx=serve_ctx)
 
 
+# ---------------------------------------------------------------------------
+# Serving-stack steps (continuous batching: cache init / admission / serve)
+# ---------------------------------------------------------------------------
+#
+# These power ``inference.scheduler.ContinuousBatcher`` on *either* path:
+# with ``mesh=None`` they return plain jit-able callables over the LOCAL ctx
+# (single device), with a mesh they return shard_map'd steps that inherit
+# the ar_table / overlap_matmul wiring of the decode builder above — one
+# serving engine, two deployments.
+
+
+def _serve_ctx(ctx: ParallelCtx, mesh, fsdp_serve: bool) -> ParallelCtx:
+    if mesh is None:
+        return LOCAL
+    return ctx if fsdp_serve else ctx.replace(fsdp=())
+
+
+def _serve_params(ap: ArchPlan, serve_ctx, mesh, fsdp_serve):
+    """(pspecs, fdims, layer_map, full_params) for the serve-side builders."""
+    from ..models.transformer import init_params
+    if mesh is None:
+        return None, None, None, lambda p: p
+    template = jax.eval_shape(lambda k: init_params(k, ap),
+                              jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(template, serve_ctx, mesh, fsdp=fsdp_serve)
+    if not fsdp_serve:
+        return pspecs, None, None, lambda p: p
+    fdims = shd.param_fsdp_dims(template, serve_ctx, mesh)
+    layer_map = lambda bp: shd.gather_params(bp, fdims["blocks"], serve_ctx)
+
+    def full_params(params):
+        full = dict(params)
+        for k in params:
+            if k not in ("blocks", "enc_blocks"):
+                full[k] = shd.gather_params(params[k], fdims[k], serve_ctx)
+        return full
+
+    return pspecs, fdims, layer_map, full_params
+
+
+def _sample_next(logits, serve_ctx: ParallelCtx, cfg, rng,
+                 temperature: float, top_k: int):
+    """Next-token sampling over (possibly vocab-sharded) logits, on device.
+    temperature=0 -> sharded greedy argmax; otherwise gather the vocab and
+    run layers.sample_token (temperature / top-k)."""
+    if temperature > 0.0:
+        full = logits
+        if serve_ctx.has_tp:
+            full = lax.all_gather(logits, serve_ctx.tp_axes, axis=1,
+                                  tiled=True)
+        return L.sample_token(full, rng, temperature=temperature,
+                              top_k=top_k, vocab_real=cfg.vocab_size)
+    return L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
+
+
+def build_cache_init(ap: ArchPlan, ctx: ParallelCtx, mesh, *, slots: int,
+                     s_max: int, block_size: int = 0,
+                     n_blocks: Optional[int] = None,
+                     fsdp_serve: bool = False) -> BuiltStep:
+    """() -> zeroed decode cache for ``slots`` batch rows (paged when
+    block_size > 0), created shard-local under the mesh."""
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+
+    def init():
+        return init_cache(ap, slots, s_max, local=True,
+                          block_size=block_size, n_blocks=n_blocks)
+
+    if mesh is None:
+        return BuiltStep(fn=init, in_specs=(), out_specs=None, mesh=None,
+                         ctx=serve_ctx)
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    fn = shard_map(init, mesh=mesh, in_specs=(), out_specs=cspecs,
+                   check_vma=False)
+    return BuiltStep(fn=fn, in_specs=(), out_specs=cspecs, mesh=mesh,
+                     ctx=serve_ctx)
+
+
+def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
+                     scan_layers: bool = True, fsdp_serve: bool = False,
+                     temperature: float = 0.0, top_k: int = 0,
+                     block_size: int = 0, n_blocks: Optional[int] = None,
+                     slots: int = 1, attn_chunk=None,
+                     ar_table: Optional[str] = None) -> BuiltStep:
+    """Fused continuous-batching step: decode all slots + sample + advance
+    the device-side slot state.
+
+    (params, cache, state, rng) -> (emitted, done, state', cache') with
+    state = {tokens, positions, remaining: (slots,) i32, active: (slots,)
+    bool}.  Inactive slots keep decoding into their own (dense) row or the
+    trash block (paged) — no masking in the hot path; ``emitted`` holds the
+    sampled token where active, the stale token elsewhere, and ``done``
+    flags slots that finished this step (caller frees/refills them).
+    ``ar_table`` / ``ctx.overlap_matmul`` behave as in build_decode_step.
+    """
+    cfg = ap.cfg
+    ar_tuner = autotune.tuner_for(ar_table)
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    if mesh is not None and serve_ctx.dp:
+        raise ValueError("serve step cannot shard slots over dp axes; "
+                         "run one batcher per data-parallel replica")
+    pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
+                                                      fsdp_serve)
+
+    def step(params, cache, state, rng):
+        params = full_params(params)
+        active = state["active"]
+        with autotune.using(ar_tuner):
+            logits, new_cache = decode_step(
+                params, cache, state["tokens"], state["positions"], ap,
+                serve_ctx, scan_layers=scan_layers, layer_map=layer_map,
+                attn_chunk=attn_chunk)
+        nxt = _sample_next(logits, serve_ctx, cfg, rng, temperature, top_k)
+        emitted = jnp.where(active, nxt, state["tokens"])
+        act_i = active.astype(jnp.int32)
+        positions = state["positions"] + act_i
+        remaining = state["remaining"] - act_i
+        done = active & ((remaining <= 0) | (positions >= s_max - 1))
+        state2 = {"tokens": emitted, "positions": positions,
+                  "remaining": remaining, "active": active & ~done}
+        return emitted, done, state2, new_cache
+
+    if mesh is None:
+        return BuiltStep(fn=step, in_specs=None, out_specs=None, mesh=None,
+                         ctx=serve_ctx, donate_argnums=(1, 2))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    sspec = {"tokens": P(None), "positions": P(None),
+             "remaining": P(None), "active": P(None)}
+    in_specs = (pspecs, cspecs, sspec, P(None))
+    out_specs = (P(None), P(None), sspec, cspecs)
+    fn = shard_map(step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx, donate_argnums=(1, 2))
+
+
+def build_admit_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
+                     prompt_len: int, slots: int = 1,
+                     scan_layers: bool = True, fsdp_serve: bool = False,
+                     temperature: float = 0.0, top_k: int = 0,
+                     block_size: int = 0, n_blocks: Optional[int] = None,
+                     ar_table: Optional[str] = None) -> BuiltStep:
+    """Full-prefill admission: run one request's prompt, splice its KV /
+    recurrent states into cache row ``slot`` on device, sample the first
+    token.  (params, cache, prompt (1, prompt_len), slot, rng) ->
+    (first_token (1,), cache').
+
+    ``prompt_len`` is static — one executable per distinct length, cached
+    by the batcher.  Length-bucketing via padding is NOT safe here in
+    general (recurrent states advance over pads, MoE routing capacity is
+    load-dependent), which is exactly why this path exists for every
+    family; attention-only (dense) families should use
+    :func:`build_admit_chunk_step` instead to avoid per-length recompiles.
+    """
+    cfg = ap.cfg
+    ar_tuner = autotune.tuner_for(ar_table)
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
+                                                      fsdp_serve)
+
+    def admit(params, cache, prompt, slot, rng):
+        params = full_params(params)
+        with autotune.using(ar_tuner):
+            logits, _, states, _ = forward_lm(
+                params, prompt, ap, serve_ctx, scan_layers=scan_layers,
+                collect_state=True, layer_map=layer_map,
+                chunk=1024 if prompt_len > 8192 else 0)
+        cache2 = seed_cache(cache, states, slot=slot)
+        nxt = _sample_next(logits[:, -1], serve_ctx, cfg, rng,
+                           temperature, top_k)
+        return nxt, cache2
+
+    if mesh is None:
+        return BuiltStep(fn=admit, in_specs=None, out_specs=None,
+                         mesh=None, ctx=serve_ctx, donate_argnums=(1,))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    in_specs = (pspecs, cspecs, P(None, None), P(), P(None))
+    out_specs = (P(None), cspecs)
+    fn = shard_map(admit, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx, donate_argnums=(1,))
+
+
+def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                           chunk: int, s_max: int, slots: int = 1,
+                           scan_layers: bool = True,
+                           fsdp_serve: bool = False,
+                           temperature: float = 0.0, top_k: int = 0,
+                           block_size: int = 0,
+                           n_blocks: Optional[int] = None,
+                           sample: bool = True,
+                           ar_table: Optional[str] = None) -> BuiltStep:
+    """Chunked-prefill admission: feed the prompt through in fixed-size
+    chunks of ``chunk`` tokens, writing K/V into cache row ``slot`` as it
+    goes — one executable for every prompt length (trailing chunk is
+    padded; see layers.attention_chunk_step for why pads are safe).
+
+    With ``sample=True`` (the *final*-chunk executable):
+    (params, cache, tokens (1, chunk), positions (1, chunk), slot,
+    last_idx, rng) -> (token (1,), cache') — the sampled continuation of
+    the token at in-chunk index ``last_idx``.  With ``sample=False`` (the
+    intermediate-chunk executable) the vocab head, sampling, and their TP
+    collectives are skipped entirely and the step returns just ``cache'``.
+    Dense families only (see transformer.prefill_chunk).
+    """
+    cfg = ap.cfg
+    ar_tuner = autotune.tuner_for(ar_table)
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
+                                                      fsdp_serve)
+
+    def admit_chunk(params, cache, tokens, positions, slot, last_idx, rng):
+        params = full_params(params)
+        with autotune.using(ar_tuner):
+            logits, cache2 = prefill_chunk(
+                params, cache, tokens, positions, ap, serve_ctx,
+                scan_layers=scan_layers, layer_map=layer_map, slot=slot,
+                return_logits=sample)
+        if not sample:
+            return cache2
+        last = lax.dynamic_index_in_dim(logits, last_idx, 1,
+                                        keepdims=False)   # (1, V_loc)
+        nxt = _sample_next(last, serve_ctx, cfg, rng, temperature, top_k)
+        return nxt, cache2
+
+    if mesh is None:
+        return BuiltStep(fn=admit_chunk, in_specs=None, out_specs=None,
+                         mesh=None, ctx=serve_ctx, donate_argnums=(1,))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    in_specs = (pspecs, cspecs, P(None, None), P(None, None), P(), P(),
+                P(None))
+    out_specs = (P(None), cspecs) if sample else cspecs
+    fn = shard_map(admit_chunk, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx, donate_argnums=(1,))
+
+
 __all__ = ["build_train_step", "build_decode_step", "build_prefill",
-           "BuiltStep"]
+           "build_cache_init", "build_serve_step", "build_admit_step",
+           "build_admit_chunk_step", "BuiltStep"]

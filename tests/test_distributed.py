@@ -22,6 +22,12 @@ def test_decode_parity(dist_runner):
 
 
 @pytest.mark.dist
+def test_serve_trace_parity(dist_runner):
+    out = dist_runner("case_serve.py")
+    assert "serve OK" in out
+
+
+@pytest.mark.dist
 def test_train_parity(dist_runner):
     out = dist_runner("case_train_parity.py")
     assert "train parity OK" in out

@@ -10,7 +10,10 @@ except ImportError:  # pure-pytest fallback (requirements-dev.txt)
     from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
-from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref,
+                                            paged_decode_attention,
+                                            paged_decode_attention_ref)
 from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
 from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
 
@@ -93,6 +96,78 @@ def test_decode_attention_position_property(b_seed, pos_val):
                             jnp.where(mask, v, -999.0), pos, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table gather)
+# ---------------------------------------------------------------------------
+
+# (B, Hq, Hkv, bs, max_blocks, n_blocks, hd, window, dtype)
+PAGED_CASES = [
+    (4, 4, 2, 16, 8, 40, 64, 0, jnp.float32),
+    (3, 8, 1, 32, 4, 16, 128, 0, jnp.float32),
+    (2, 2, 2, 64, 4, 12, 64, 128, jnp.bfloat16),   # sliding window
+    (5, 6, 2, 8, 8, 48, 64, 0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES,
+                         ids=[f"case{i}" for i in range(len(PAGED_CASES))])
+def test_paged_decode_attention(case):
+    B, Hq, Hkv, bs, mb, nb, hd, window, dt = case
+    assert nb >= B * mb + 1
+    q = jnp.asarray(rng.standard_normal((B, Hq, hd)), dt)
+    k = jnp.asarray(rng.standard_normal((nb, bs, Hkv, hd)), dt)
+    v = jnp.asarray(rng.standard_normal((nb, bs, Hkv, hd)), dt)
+    # random (collision-free) logical->physical mapping; block 0 is trash
+    tbl = jnp.asarray(1 + rng.permutation(nb - 1)[:B * mb].reshape(B, mb),
+                      jnp.int32)
+    pos = jnp.asarray(rng.integers(0, mb * bs, B), jnp.int32)
+    out = paged_decode_attention(q, k, v, tbl, pos, window=window,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(q, k, v, tbl, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dt), rtol=_tol(dt))
+
+
+def test_paged_decode_attention_matches_dense_gather():
+    """Paged kernel on a scattered table == dense kernel on the gathered
+    logical view (the model-level parity the serving stack relies on)."""
+    B, Hq, Hkv, bs, mb, nb, hd = 3, 4, 2, 32, 4, 16, 64
+    r = np.random.default_rng(7)
+    q = jnp.asarray(r.standard_normal((B, Hq, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((nb, bs, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((nb, bs, Hkv, hd)), jnp.float32)
+    tbl = jnp.asarray(1 + r.permutation(nb - 1)[:B * mb].reshape(B, mb),
+                      jnp.int32)
+    pos = jnp.asarray([5, 63, 127], jnp.int32)
+    out_p = paged_decode_attention(q, k, v, tbl, pos, interpret=True)
+    k_log = k[tbl].reshape(B, mb * bs, Hkv, hd)
+    v_log = v[tbl].reshape(B, mb * bs, Hkv, hd)
+    out_d = decode_attention(q, k_log, v_log, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_attention_trash_isolation():
+    """Scribbling on the trash block (0) and on unreachable blocks must not
+    change the output — the isolation invariant preemption relies on."""
+    B, Hq, Hkv, bs, mb, nb, hd = 2, 2, 1, 16, 4, 32, 64
+    r = np.random.default_rng(11)
+    q = jnp.asarray(r.standard_normal((B, Hq, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((nb, bs, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((nb, bs, Hkv, hd)), jnp.float32)
+    tbl = jnp.asarray(1 + r.permutation(nb - 1)[:B * mb].reshape(B, mb),
+                      jnp.int32)
+    pos = jnp.asarray([30, 61], jnp.int32)
+    out1 = paged_decode_attention(q, k, v, tbl, pos, interpret=True)
+    live = np.unique(np.asarray(tbl))
+    dead = np.setdiff1d(np.arange(nb), live)
+    k2 = k.at[dead].set(999.0)
+    v2 = v.at[dead].set(-999.0)
+    out2 = paged_decode_attention(q, k2, v2, tbl, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
 # ---------------------------------------------------------------------------
