@@ -1,0 +1,143 @@
+"""Bench-regression gate: compare fresh bench JSONs against committed
+baselines and fail on drift.
+
+    python -m benchmarks.check_regression \\
+        --baseline-allreduce base/BENCH_allreduce.json \\
+        --fresh-allreduce BENCH_allreduce.json \\
+        --baseline-serve base/BENCH_serve.json \\
+        --fresh-serve BENCH_serve.json \\
+        [--baseline-spec base/BENCH_spec.json --fresh-spec BENCH_spec.json] \\
+        [--threshold 0.25]
+
+What is compared (chosen to be meaningful on shared CI runners):
+
+* ``BENCH_allreduce.json`` — the dispatcher's chosen-vs-best **regret**,
+  aggregated as the mean over size buckets.  Individual CPU collective
+  timings are jittery, so only the aggregate is gated, with an absolute
+  slack floor on top of the relative threshold.
+* ``BENCH_serve.json`` — the trace-replay **logical-step** metrics
+  (TTFT/TPOT p50/p99 in steps, step counts, emitted tokens, peak KV
+  footprint).  These are deterministic given the seeded trace, so any
+  drift beyond the threshold is a real behavior change, not noise.
+* ``BENCH_spec.json`` (optional) — per-(k, drafter) acceptance rate and
+  step counts, deterministic for the same reason.
+
+Exit code 1 with a per-field report when any check trips.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+# Deterministic (logical-step / token-count) ServeMetrics fields.
+SERVE_FIELDS = ("ttft_steps_p50", "ttft_steps_p99", "tpot_steps_p50",
+                "tpot_steps_p99", "steps", "total_new_tokens",
+                "peak_kv_tokens", "preemptions", "completed")
+SPEC_FIELDS = ("acceptance_rate", "accepted_tokens", "spec_steps", "steps",
+               "total_new_tokens", "step_ratio")
+# Regret on CPU runners is noisy; gate the mean with extra absolute slack.
+REGRET_ABS_SLACK = 0.5
+
+
+def _load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _drift(base: float, fresh: float) -> float:
+    """Symmetric-denominator relative drift with a unit floor so
+    near-zero baselines don't explode."""
+    return abs(fresh - base) / max(abs(base), 1.0)
+
+
+def _serve_key(row: Dict) -> tuple:
+    return (row.get("rate"), row.get("slots"), row.get("block_size"),
+            row.get("n_blocks"), bool(row.get("tight_pool")),
+            bool(row.get("decode_heavy")))
+
+
+def _spec_key(row: Dict) -> tuple:
+    return (row.get("k"), row.get("drafter"))
+
+
+def _check_rows(base_rows: List[Dict], fresh_rows: List[Dict], key_fn,
+                fields, threshold: float, label: str,
+                failures: List[str]) -> None:
+    base_by = {key_fn(r): r for r in base_rows}
+    fresh_by = {key_fn(r): r for r in fresh_rows}
+    missing = set(base_by) - set(fresh_by)
+    if missing:
+        failures.append(f"{label}: fresh run lost cells {sorted(missing)}")
+    for key in sorted(set(base_by) & set(fresh_by), key=str):
+        b, f = base_by[key], fresh_by[key]
+        for field in fields:
+            if field not in b:       # baseline predates the field
+                continue
+            if field not in f:
+                failures.append(f"{label}{key}: field {field!r} missing "
+                                f"from fresh row")
+                continue
+            d = _drift(float(b[field]), float(f[field]))
+            if d > threshold:
+                failures.append(
+                    f"{label}{key}.{field}: baseline {b[field]:.4g} -> "
+                    f"fresh {f[field]:.4g} (drift {d:.1%} > "
+                    f"{threshold:.0%})")
+
+
+def check_allreduce(base: Dict, fresh: Dict, threshold: float,
+                    failures: List[str]) -> None:
+    for doc, name in ((base, "baseline"), (fresh, "fresh")):
+        if not doc.get("picks"):
+            failures.append(f"allreduce: {name} JSON has no 'picks'")
+            return
+        if "tuned_table" not in doc:
+            failures.append(f"allreduce: {name} JSON has no 'tuned_table'")
+            return
+    def mean_regret(doc):
+        rs = [max(0.0, float(p["regret"])) for p in doc["picks"]]
+        return sum(rs) / len(rs)
+    b, f = mean_regret(base), mean_regret(fresh)
+    if f > b * (1.0 + threshold) + REGRET_ABS_SLACK:
+        failures.append(
+            f"allreduce mean regret: baseline {b:.3f} -> fresh {f:.3f} "
+            f"(allowed <= {b * (1 + threshold) + REGRET_ABS_SLACK:.3f})")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline-allreduce", required=True)
+    p.add_argument("--fresh-allreduce", required=True)
+    p.add_argument("--baseline-serve", required=True)
+    p.add_argument("--fresh-serve", required=True)
+    p.add_argument("--baseline-spec", default=None)
+    p.add_argument("--fresh-spec", default=None)
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="max allowed relative drift (default 0.25)")
+    args = p.parse_args(argv)
+
+    failures: List[str] = []
+    check_allreduce(_load(args.baseline_allreduce),
+                    _load(args.fresh_allreduce), args.threshold, failures)
+    _check_rows(_load(args.baseline_serve)["rows"],
+                _load(args.fresh_serve)["rows"], _serve_key, SERVE_FIELDS,
+                args.threshold, "serve", failures)
+    if args.baseline_spec and args.fresh_spec:
+        _check_rows(_load(args.baseline_spec)["rows"],
+                    _load(args.fresh_spec)["rows"], _spec_key, SPEC_FIELDS,
+                    args.threshold, "spec", failures)
+
+    if failures:
+        print(f"[check_regression] FAIL ({len(failures)} violations):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("[check_regression] OK: benches within "
+          f"{args.threshold:.0%} of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,10 +4,14 @@ simulator used for the paper's strong-scaling and serving studies."""
 from .engine import InferenceEngine, GenerationResult
 from .kv_cache import BlockAllocator, CacheStats, paged_geometry
 from .scheduler import ContinuousBatcher, Request, ServeMetrics, make_trace
+from .speculative import (AdaptiveK, Drafter, ModelDrafter, NGramDrafter,
+                          ReplayDrafter, make_drafter)
 from .simulator import (ChipSpec, A100, GH200, V5E, ClusterSim,
                         simulate_batch_latency, simulate_trace)
 
 __all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
            "Request", "ServeMetrics", "make_trace", "BlockAllocator",
            "CacheStats", "paged_geometry", "ChipSpec", "A100", "GH200",
-           "V5E", "ClusterSim", "simulate_batch_latency", "simulate_trace"]
+           "V5E", "ClusterSim", "simulate_batch_latency", "simulate_trace",
+           "Drafter", "NGramDrafter", "ModelDrafter", "ReplayDrafter",
+           "AdaptiveK", "make_drafter"]

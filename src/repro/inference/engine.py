@@ -49,7 +49,9 @@ class InferenceEngine:
                  mesh=None, s_max: int = 4096, fsdp_serve: bool = False,
                  scan_layers: bool = True, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0, block_size: int = 0,
-                 ar_table: Optional[str] = None):
+                 ar_table: Optional[str] = None,
+                 spec_mode: Optional[str] = None, spec_k: int = 4,
+                 draft_arch: str = "llama3.2-1b", drafter=None):
         """``ar_table``: optional path to a persisted all-reduce autotune
         table (see repro.core.autotune); with ``ctx.ar_strategy="auto"`` the
         decode/prefill steps dispatch each all-reduce call site on message
@@ -57,7 +59,13 @@ class InferenceEngine:
         the output-projection GEMMs against their all-reduces.
         ``block_size > 0`` selects the paged KV layout on the local path
         (identity block table — the continuous batcher owns allocator-driven
-        paging; here paging is exercised for parity)."""
+        paging; here paging is exercised for parity).
+        ``spec_mode`` ("ngram" | "draft" | "replay", or an injected
+        ``drafter``) switches ``generate`` to speculative decoding: per
+        step, ``spec_k`` drafted tokens are verified batch-wide in one
+        fused pass, each row advancing by its own accepted length.  Greedy
+        spec output is bitwise-identical to plain greedy ``generate``.
+        Dense families only."""
         self.ap = ap
         self.cfg = ap.cfg
         self.params = params
@@ -72,6 +80,25 @@ class InferenceEngine:
                 "paged engine cache is local-path only; use "
                 "ContinuousBatcher for mesh-path paged serving")
         self._rng = jax.random.PRNGKey(seed)
+        self.spec_mode = spec_mode
+        self.spec_k = spec_k
+        self._spec = None
+        self._drafter = drafter
+        self._draft_arch = draft_arch
+        self._seed = seed
+        if drafter is not None and not spec_mode:
+            raise ValueError("an injected drafter needs spec_mode set "
+                             "(got drafter= without spec_mode=)")
+        if spec_mode:
+            if self.cfg.family != "dense":
+                raise ValueError("speculative generate supports dense "
+                                 f"families only, not {self.cfg.family!r}")
+            from ..parallel.steps import build_spec_verify_step
+            self._spec = build_spec_verify_step(
+                ap, ctx, mesh, k=spec_k, s_max=s_max,
+                scan_layers=scan_layers, fsdp_serve=fsdp_serve,
+                temperature=temperature, top_k=top_k,
+                ar_table=ar_table).jit()
         if mesh is not None:
             from ..parallel.steps import build_decode_step, build_prefill
             self._prefill = jax.jit(build_prefill(
@@ -120,6 +147,86 @@ class InferenceEngine:
                              vocab_real=self.cfg.vocab_size)
         return nxt, cache
 
+    def _make_drafter(self):
+        # built once and reused across generate() calls (a draft model's
+        # init + jit is not cheap); reset() reseeds per-row histories
+        if self._drafter is None:
+            from .speculative import make_drafter
+            self._drafter = make_drafter(self.spec_mode,
+                                         draft_arch=self._draft_arch,
+                                         seed=self._seed)
+        return self._drafter
+
+    def _step_rng(self):
+        if self.temperature > 0.0:
+            self._rng, r = jax.random.split(self._rng)
+            return r
+        return self._rng
+
+    def _generate_spec(self, tokens, max_new_tokens: int,
+                       extra) -> GenerationResult:
+        """Speculative batched generation: all rows share each fused
+        verify pass but advance by their own accepted lengths; rows that
+        reach ``max_new_tokens`` go inactive and decode into their own
+        row harmlessly (write-ordering invariant) until the batch drains.
+        """
+        B, S = tokens.shape
+        t0 = time.perf_counter()
+        if self._prefill is not None:
+            nxt, cache = self._prefill(self.params, tokens)
+        else:
+            nxt, cache = self._local_prefill_jit(tokens, extra)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        t1 = time.perf_counter()
+
+        drafter = self._make_drafter()
+        prompts_np = np.asarray(tokens)
+        outputs = [[int(t)] for t in nxt]
+        for b in range(B):
+            drafter.reset(b, list(prompts_np[b]) + [int(nxt[b])])
+        positions = np.full((B,), S, np.int32)
+        remaining = np.full((B,), max_new_tokens - 1, np.int32)
+        active = remaining > 0
+        cur = nxt.copy()
+        k = self.spec_k
+        steps = 1  # count prefill's token like the plain path counts steps
+        while active.any():
+            drafts = np.zeros((B, k), np.int32)
+            for b in range(B):
+                if active[b]:
+                    drafts[b] = np.clip(drafter.draft(b, k), 0,
+                                        self.cfg.vocab_size - 1)
+            state = {"tokens": jnp.asarray(cur),
+                     "positions": jnp.asarray(positions),
+                     "remaining": jnp.asarray(remaining),
+                     "active": jnp.asarray(active)}
+            emitted, accepted, cache = self._spec(
+                self.params, cache, state, jnp.asarray(drafts),
+                self._step_rng())
+            emitted = np.asarray(emitted)
+            accepted = np.asarray(accepted)
+            steps += 1
+            for b in range(B):
+                if not active[b]:
+                    continue
+                take = min(int(accepted[b]) + 1, int(remaining[b]),
+                           self.s_max - 1 - int(positions[b]))
+                toks = [int(t) for t in emitted[b, :take]]
+                outputs[b].extend(toks)
+                drafter.observe(b, toks)
+                cur[b] = toks[-1]
+                positions[b] += take
+                remaining[b] -= take
+                if remaining[b] <= 0 or positions[b] >= self.s_max - 1:
+                    active[b] = False
+        jax.block_until_ready(cache["k"])
+        t2 = time.perf_counter()
+        new = np.asarray([o[:max_new_tokens] for o in outputs], np.int32)
+        return GenerationResult(
+            tokens=np.concatenate([prompts_np, new], axis=1),
+            new_tokens=new, prefill_s=t1 - t0, decode_s=t2 - t1,
+            steps=steps)
+
     # -- public API ----------------------------------------------------------
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
@@ -130,6 +237,8 @@ class InferenceEngine:
         tokens = jnp.asarray(prompts, jnp.int32)
         B, S = tokens.shape
         assert S + max_new_tokens <= self.s_max
+        if self._spec is not None:
+            return self._generate_spec(tokens, max_new_tokens, extra)
         t0 = time.perf_counter()
         if self._prefill is not None:
             args = [self.params, tokens]

@@ -187,6 +187,29 @@ class BlockAllocator:
         self.preemptions += 1
         return self.free(slot)
 
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Roll ``slot`` back so it covers exactly logical positions
+        [0, n_tokens) — the speculative-decode rejection rollback: blocks
+        that only held rejected draft K/V go straight back on the free
+        list.  Returns the number of blocks released.
+
+        Freed blocks may contain stale K/V; that is safe for the same
+        write-ordering reason preemption-freed blocks are (DESIGN.md §7):
+        a block is only re-read through some slot's table after that slot
+        has overwritten every position the attention mask exposes.
+        """
+        keep = self.blocks_for(n_tokens)
+        own = self._owned[slot]
+        tail = own[keep:]
+        if tail:
+            del own[keep:]
+            # LIFO: rejected-tail blocks are the hottest, reuse them first.
+            self._free.extend(reversed(tail))
+            self.table[slot, keep:] = TRASH_BLOCK
+            self.version += 1
+        self._tokens[slot] = min(int(self._tokens[slot]), n_tokens)
+        return len(tail)
+
     # -- defragmentation ---------------------------------------------------
 
     def defragment(self) -> Optional[np.ndarray]:

@@ -25,6 +25,11 @@ This is the *unified serving stack* over the paged KV-cache subsystem:
   block list on demand and *preempts* (evicts + requeues) the youngest
   request when the pool runs dry, so a slot count that would overflow a
   dense ``(slots, s_max)`` cache keeps serving.
+* with ``spec_mode`` set, the per-step executable becomes the fused
+  draft-verify step (``build_spec_verify_step``): slots advance by
+  variable accepted lengths, rejected-draft K/V rolls back via
+  ``BlockAllocator.truncate``, and the per-layer all-reduce is amortized
+  over up to ``spec_k + 1`` tokens per step (DESIGN.md §8).
 
 Scheduling time is a logical step clock (1.0 per engine step) so traces
 replay deterministically; wall-clock timestamps are recorded alongside for
@@ -42,8 +47,10 @@ import numpy as np
 
 from ..core.pcontext import ParallelCtx, LOCAL
 from ..parallel.steps import (build_admit_chunk_step, build_admit_step,
-                              build_cache_init, build_serve_step)
+                              build_cache_init, build_serve_step,
+                              build_spec_verify_step)
 from .kv_cache import BlockAllocator, paged_geometry
+from .speculative import AdaptiveK, Drafter, make_drafter
 
 
 @dataclasses.dataclass
@@ -75,6 +82,23 @@ class ServeMetrics:
     counts 1 step) and converted to wall seconds via the measured mean
     step time, so the numbers are stable under CI jitter but still carry
     real units.
+
+    Speculative-decoding fields (all zero when ``spec_mode`` is off):
+
+    * ``spec_steps``    — verify passes run (each replaces up to k+1
+      sequential decode steps).
+    * ``drafted_tokens`` / ``accepted_tokens`` — totals over the trace;
+      ``acceptance_rate`` is their ratio (fraction of drafted tokens the
+      target model verified — counted at verification, so a request
+      terminating mid-run can verify more drafts than it emits).
+    * ``accepted_tokens_per_step`` — mean verified drafts per verify
+      pass across all slots: the per-step all-reduce amortization factor
+      (an upper bound on emitted-tokens-per-step minus the active-slot
+      count, tight when no request terminates mid-speculation).
+    * ``drafter_hit_rate`` — fraction of ``draft()`` calls where the
+      drafter found a real candidate instead of falling back.
+    * ``spec_k_mean`` — mean speculation length used (moves under
+      ``spec_adaptive``).
     """
     requests: int
     completed: int
@@ -95,6 +119,14 @@ class ServeMetrics:
     kv_capacity_tokens: int      # reserved footprint of the layout
     cache_utilization: float     # occupied / reserved at peak-usage basis
     cache_stats: Optional[Dict[str, Any]] = None
+    # speculative decoding (see class docstring; zeros when disabled)
+    spec_steps: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    acceptance_rate: float = 0.0
+    accepted_tokens_per_step: float = 0.0
+    drafter_hit_rate: float = 0.0
+    spec_k_mean: float = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -109,7 +141,21 @@ class ContinuousBatcher:
                  ar_table: Optional[str] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  scan_layers: bool = True, fsdp_serve: bool = False,
-                 admit_mode: str = "full", admit_chunk: int = 32):
+                 admit_mode: str = "full", admit_chunk: int = 32,
+                 spec_mode: Optional[str] = None, spec_k: int = 4,
+                 spec_adaptive: bool = False,
+                 draft_arch: str = "llama3.2-1b",
+                 drafter: Optional[Drafter] = None):
+        """``spec_mode`` turns on speculative decoding: each engine step
+        drafts ``spec_k`` tokens per slot (``"ngram"`` prompt-lookup,
+        ``"draft"`` small model from ``configs.registry`` via
+        ``draft_arch``, or an injected ``drafter``) and verifies them in
+        one fused pass (``build_spec_verify_step``), emitting a variable
+        1..spec_k+1 tokens per slot per step.  Greedy spec streams are
+        bitwise-identical to plain greedy decode; rejected-draft K/V is
+        rolled back via ``BlockAllocator.truncate`` on the paged path.
+        ``spec_adaptive`` walks k along {2,4,8}∩[1,spec_k] by acceptance
+        rate.  Dense (attention-only) families only."""
         self.ap, self.cfg, self.params = ap, ap.cfg, params
         self.slots = slots
         self.s_max = s_max
@@ -152,6 +198,32 @@ class ContinuousBatcher:
         self._serve = build_serve_step(ap, ctx, mesh, ar_table=ar_table,
                                        **sample_kw, **kw).jit()
         self._admit_kw = dict(ar_table=ar_table, **sample_kw, **kw)
+        # -- speculative decoding wiring ------------------------------------
+        self.spec_mode = spec_mode
+        self.spec_k = spec_k
+        self.drafter: Optional[Drafter] = None
+        self._speck: Optional[AdaptiveK] = None
+        self._spec_fns: Dict[int, Any] = {}     # k -> jitted verify step
+        self._spec_kw = dict(self._admit_kw)
+        self._spec_steps = 0
+        self._spec_drafted = 0
+        self._spec_accepted = 0
+        self._spec_k_sum = 0
+        if drafter is not None and not spec_mode:
+            raise ValueError("an injected drafter needs spec_mode set "
+                             "(got drafter= without spec_mode=)")
+        if spec_mode:
+            if self.cfg.family != "dense":
+                raise ValueError("speculative decoding rides the chunked-"
+                                 "prefill verify path: dense families "
+                                 f"only, not {self.cfg.family!r}")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            self.drafter = drafter if drafter is not None else \
+                make_drafter(spec_mode, draft_arch=draft_arch, seed=seed)
+            if spec_adaptive:
+                self._speck = AdaptiveK(ks=tuple(sorted(
+                    {k2 for k2 in (2, 4, 8) if k2 <= spec_k} | {spec_k})))
         self._admit_full: Dict[int, Any] = {}   # prompt_len -> jitted fn
         self._admit_chunked = None
         if admit_mode == "chunked":
@@ -253,6 +325,8 @@ class ContinuousBatcher:
         self.remaining[slot] = req.max_new - 1
         self.tokens[slot] = nxt
         self.active_mask[slot] = True
+        if self.drafter is not None:
+            self.drafter.reset(slot, list(req.prompt) + [nxt])
         self._admit_seq[slot] = self._seq
         self._seq += 1
         self.outputs[req.rid] = [nxt]
@@ -300,11 +374,15 @@ class ContinuousBatcher:
         self._dirty = True
         return True
 
-    def _ensure_growth(self, slot: int) -> None:
-        """Pre-step invariant: blocks cover the next write position.  On
-        OOM, preempt youngest-first until the growth fits (the growing slot
-        itself may be the victim)."""
-        while not self.alloc.ensure(slot, int(self.positions[slot]) + 1):
+    def _ensure_growth(self, slot: int,
+                       n_tokens: Optional[int] = None) -> None:
+        """Pre-step invariant: blocks cover the next write position (or an
+        explicit ``n_tokens`` target — the spec verify chunk's whole write
+        range).  On OOM, preempt youngest-first until the growth fits (the
+        growing slot itself may be the victim)."""
+        if n_tokens is None:
+            n_tokens = int(self.positions[slot]) + 1
+        while not self.alloc.ensure(slot, n_tokens):
             victim_ok = self._preempt_youngest()
             if not self.active_mask[slot]:
                 return  # we evicted ourselves
@@ -314,10 +392,100 @@ class ContinuousBatcher:
                     "raise n_blocks")
         self._sync_table()
 
+    # -- speculative decoding ------------------------------------------------
+
+    def _spec_fn(self, k: int):
+        fn = self._spec_fns.get(k)
+        if fn is None:
+            fn = build_spec_verify_step(self.ap, self.ctx, self.mesh,
+                                        k=k, **self._spec_kw).jit()
+            self._spec_fns[k] = fn
+        return fn
+
+    def _spec_step(self, now: float):
+        """One draft + fused-verify step over all slots.
+
+        Per active slot: draft k tokens, write/score the C = k+1 chunk
+        [current token, drafts] in one pass, take the verified prefix plus
+        one correction/bonus token (1..k+1 tokens), and truncate the
+        rejected tail's blocks back to the pool.  The host slot state is
+        authoritative (variable per-slot advance), re-pushed every step.
+        """
+        if not self.active_mask.any():
+            return
+        k = self._speck.k if self._speck is not None else self.spec_k
+        C = k + 1
+        drafts = np.zeros((self.slots, k), np.int32)
+        for s in range(self.slots):
+            if self.active_mask[s]:
+                # clamp: a cross-vocabulary drafter must still propose
+                # valid target ids (bad ids would just be rejected anyway)
+                drafts[s] = np.clip(self.drafter.draft(s, k), 0,
+                                    self.cfg.vocab_size - 1)
+        if self.alloc is not None:
+            for s in range(self.slots):
+                # the verify chunk writes positions [p, p+C); cover them
+                # all up front (clamped to capacity: overflow writes are
+                # trash-routed on device), preempting youngest on OOM
+                if self.active_mask[s]:
+                    self._ensure_growth(s, min(int(self.positions[s]) + C,
+                                               self.s_max))
+        occ = int(self.positions[self.active_mask].sum()) + \
+            int(self.active_mask.sum())
+        self._peak_occupied = max(self._peak_occupied, occ)
+        if self._dirty:
+            self._push_state()
+        was_active = self.active_mask.copy()
+        emitted, accepted, self.cache = self._spec_fn(k)(
+            self.params, self.cache, self._state, jnp.asarray(drafts),
+            self._step_rng())
+        emitted = np.asarray(emitted)
+        accepted = np.asarray(accepted)
+        self.steps_run += 1
+        self._spec_steps += 1
+        self._spec_k_sum += k
+        n_active = acc_sum = 0
+        for s in range(self.slots):
+            if not was_active[s]:
+                continue
+            a = int(accepted[s])
+            # cap by the request budget and the cache capacity — exactly
+            # where sequential decode would have stopped emitting.  The
+            # capacity floor of 1 mirrors the plain step: a slot admitted
+            # at position s_max-1 still decodes once (querying/writing the
+            # last in-bounds position) before its done check fires.
+            take = min(a + 1, int(self.remaining[s]),
+                       max(self.s_max - 1 - int(self.positions[s]), 1))
+            toks = [int(t) for t in emitted[s, :take]]
+            self.outputs[self.active[s].rid].extend(toks)
+            self.drafter.observe(s, toks)
+            self.tokens[s] = toks[-1]
+            self.positions[s] += take
+            self.remaining[s] -= take
+            n_active += 1
+            acc_sum += a
+            self._spec_drafted += k
+            self._spec_accepted += a
+            if self.alloc is not None:
+                # KV rollback: blocks holding only rejected-draft writes
+                # go back to the pool
+                self.alloc.truncate(s, int(self.positions[s]))
+                self.alloc.note_usage(s, int(self.positions[s]))
+            if self.remaining[s] <= 0 \
+                    or self.positions[s] >= self.s_max - 1:
+                self._release(s, now)
+        if self.alloc is not None:
+            self._sync_table()
+        self._dirty = True  # host state is authoritative under spec
+        if self._speck is not None and n_active:
+            self._speck.update(acc_sum / n_active, k)
+
     # -- one engine step -----------------------------------------------------
 
     def step(self, now: float):
         """One decode step over all slots (no-op when none active)."""
+        if self.spec_mode:
+            return self._spec_step(now)
         if not self.active_mask.any():
             return
         if self.alloc is not None:
@@ -364,6 +532,10 @@ class ContinuousBatcher:
             self.steps_run = 0
             self._peak_occupied = 0
             self.outputs = {}
+            self._spec_steps = self._spec_drafted = 0
+            self._spec_accepted = self._spec_k_sum = 0
+            if self.drafter is not None:
+                self.drafter.calls = self.drafter.hits = 0
             if self.alloc is not None:
                 self.alloc.reset_stats()
         self._wall0 = time.perf_counter()
@@ -442,7 +614,18 @@ class ContinuousBatcher:
             tpot_s_p99=_percentile(tpot, 99) * step_s,
             preemptions=preempt, peak_kv_tokens=int(peak_tok),
             kv_capacity_tokens=int(cap), cache_utilization=float(util),
-            cache_stats=cache_stats)
+            cache_stats=cache_stats,
+            spec_steps=self._spec_steps,
+            drafted_tokens=self._spec_drafted,
+            accepted_tokens=self._spec_accepted,
+            acceptance_rate=self._spec_accepted / self._spec_drafted
+            if self._spec_drafted else 0.0,
+            accepted_tokens_per_step=self._spec_accepted / self._spec_steps
+            if self._spec_steps else 0.0,
+            drafter_hit_rate=self.drafter.hit_rate
+            if self.drafter is not None else 0.0,
+            spec_k_mean=self._spec_k_sum / self._spec_steps
+            if self._spec_steps else 0.0)
 
 
 def make_trace(n_requests: int, *, mean_in: int, mean_out: int,

@@ -5,6 +5,8 @@
         --block-size 8 --ar-strategy auto --overlap
     python -m repro.launch.serve --arch llama3.2-1b --mode trace --tp 8 \
         --pods 2 --block-size 8   # under XLA_FLAGS=...device_count=8
+    python -m repro.launch.serve --arch llama3.2-1b --mode trace \
+        --spec-mode ngram --spec-k 4   # speculative decoding (DESIGN.md §8)
 
 Trace mode replays a BurstGPT-style synthetic trace through the
 continuous batcher (local path, or the mesh path when --tp > 1) and
@@ -57,7 +59,9 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
               prompt_len: int = 16, max_new: int = 16,
               ar_strategy: str = "flat", ar_table=None, overlap: bool = False,
               temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-              tp: int = 1, pods: int = 1, block_size: int = 0):
+              tp: int = 1, pods: int = 1, block_size: int = 0,
+              spec_mode=None, spec_k: int = 4,
+              draft_arch: str = "llama3.2-1b"):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if block_size and tp > 1:
         raise SystemExit("--block-size with --mode batch is local-path "
@@ -70,7 +74,9 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
         s_max = -(-s_max // block_size) * block_size
     eng = InferenceEngine(ap, params, ctx=ctx, mesh=mesh, s_max=s_max,
                           temperature=temperature, top_k=top_k, seed=seed,
-                          block_size=block_size, ar_table=ar_table)
+                          block_size=block_size, ar_table=ar_table,
+                          spec_mode=spec_mode, spec_k=spec_k,
+                          draft_arch=draft_arch)
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
     extra = {}
@@ -84,11 +90,12 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
             cfg.dtype)
     res = eng.generate(prompts, max_new, extra=extra)
     layout = f"paged(bs={block_size})" if block_size else "dense"
+    spec = f" spec={spec_mode}(k={spec_k})" if spec_mode else ""
     print(f"[serve] {arch}: batch {batch} prompt {prompt_len} "
-          f"new {max_new} ar={ar_strategy} tp={tp} {layout} "
+          f"new {max_new} ar={ar_strategy} tp={tp} {layout}{spec} "
           f"| prefill {res.prefill_s*1e3:.0f}ms "
           f"decode {res.decode_s*1e3:.0f}ms "
-          f"({res.decode_tokens_per_s:.0f} tok/s)")
+          f"({res.decode_tokens_per_s:.0f} tok/s, {res.steps} steps)")
     return res
 
 
@@ -99,7 +106,8 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
               top_k: int = 0, seed: int = 0, tp: int = 1, pods: int = 1,
               admit_mode: str = "full", admit_chunk: int = 32,
               mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
-              json_out=None):
+              spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
+              draft_arch: str = "llama3.2-1b", json_out=None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
@@ -110,7 +118,9 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
         ap, params, slots=slots, s_max=s_max, ctx=ctx, mesh=mesh,
         block_size=block_size, n_blocks=n_blocks, ar_table=ar_table,
         temperature=temperature, top_k=top_k, seed=seed,
-        admit_mode=admit_mode, admit_chunk=admit_chunk)
+        admit_mode=admit_mode, admit_chunk=admit_chunk,
+        spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
+        draft_arch=draft_arch)
     reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
                       rate=rate, vocab=cfg.vocab_size, seed=seed)
     done = sched.run(reqs)
@@ -131,6 +141,14 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
           f"{m.kv_capacity_tokens} reserved "
           f"(util {m.cache_utilization:.2f}), "
           f"{m.preemptions} preemptions")
+    if spec_mode:
+        print(f"[serve]   spec[{spec_mode} k_mean={m.spec_k_mean:.1f}"
+              f"{' adaptive' if spec_adaptive else ''}]: "
+              f"{m.accepted_tokens}/{m.drafted_tokens} drafts accepted "
+              f"(rate {m.acceptance_rate:.2f}), "
+              f"{m.accepted_tokens_per_step:.2f} accepted/step over "
+              f"{m.spec_steps} verify steps, drafter hit rate "
+              f"{m.drafter_hit_rate:.2f}")
     if json_out:
         with open(json_out, "w") as f:
             json.dump(m.to_dict(), f, indent=2, default=float)
@@ -171,16 +189,31 @@ def main(argv=None):
                    default="full")
     p.add_argument("--admit-chunk", type=int, default=32)
     p.add_argument("--rate", type=float, default=2.0)
-    p.add_argument("--json", dest="json_out", default=None,
-                   help="write trace metrics JSON here")
+    p.add_argument("--spec-mode", choices=["none", "ngram", "draft"],
+                   default="none",
+                   help="speculative decoding drafter (none = off)")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="draft tokens verified per fused pass")
+    p.add_argument("--spec-adaptive", action="store_true",
+                   help="acceptance-rate-adaptive speculation length")
+    p.add_argument("--draft-arch", default="llama3.2-1b",
+                   help="registry arch for --spec-mode draft")
+    p.add_argument("--json", "--metrics-json", dest="json_out",
+                   default=None, help="write trace metrics JSON here")
     args = p.parse_args(argv)
+    spec_mode = None if args.spec_mode == "none" else args.spec_mode
+    if args.mode == "batch" and args.spec_adaptive:
+        raise SystemExit("--spec-adaptive is trace-mode only (the engine "
+                         "runs a fixed --spec-k)")
     if args.mode == "batch":
         run_batch(args.arch, smoke=args.smoke, batch=args.batch,
                   prompt_len=args.prompt_len, max_new=args.max_new,
                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
                   overlap=args.overlap, temperature=args.temperature,
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
-                  pods=args.pods, block_size=args.block_size)
+                  pods=args.pods, block_size=args.block_size,
+                  spec_mode=spec_mode, spec_k=args.spec_k,
+                  draft_arch=args.draft_arch)
     else:
         run_trace(args.arch, smoke=args.smoke, n_requests=args.requests,
                   slots=args.slots, s_max=args.s_max,
@@ -190,7 +223,9 @@ def main(argv=None):
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
                   pods=args.pods, admit_mode=args.admit_mode,
                   admit_chunk=args.admit_chunk, rate=args.rate,
-                  json_out=args.json_out)
+                  spec_mode=spec_mode, spec_k=args.spec_k,
+                  spec_adaptive=args.spec_adaptive,
+                  draft_arch=args.draft_arch, json_out=args.json_out)
     return 0
 
 

@@ -511,6 +511,143 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                      mesh=mesh, ctx=serve_ctx, donate_argnums=(1, 2))
 
 
+def _spec_targets(logits, drafts, serve_ctx: ParallelCtx, cfg, rng,
+                  temperature: float, top_k: int):
+    """Per-position target tokens + draft accept mask for the verify pass.
+
+    logits: (B, C, V_loc) vocab-sharded scores for the C = k+1 chunk
+    inputs; drafts: (B, k) proposed tokens.  Returns (tgt (B, C) int32,
+    match (B, k) bool) where ``tgt[:, j]`` is the target-model token
+    emitted at draft position j when j is the first rejection (or the
+    bonus position j == k), and ``match[:, j]`` accepts draft j.
+
+    Greedy (temperature == 0): tgt is the sharded argmax and a draft
+    matches iff it equals it — the emitted stream is bitwise the plain
+    greedy stream.  Sampled: drafts are deterministic proposals (every
+    shipped drafter is), so exact speculative rejection sampling reduces
+    to accept draft d with probability p(d), else resample from the
+    renormalized leftover p with d zeroed — per-token output distribution
+    is exactly the target p (see DESIGN.md §8).
+    """
+    B, C = logits.shape[0], logits.shape[1]
+    k = C - 1
+    if temperature <= 0.0:
+        flat = logits.reshape(B * C, logits.shape[-1])
+        tgt = L.greedy_sample(flat, serve_ctx, cfg.vocab_size)
+        tgt = tgt.reshape(B, C)
+        return tgt, drafts == tgt[:, :k]
+    full = logits
+    if serve_ctx.has_tp:
+        full = lax.all_gather(logits, serve_ctx.tp_axes, axis=2, tiled=True)
+    lf = full.astype(jnp.float32)
+    V = lf.shape[-1]
+    lf = jnp.where((jnp.arange(V) < cfg.vocab_size)[None, None, :], lf,
+                   L.NEG_INF)
+    lf = lf / temperature
+    if top_k > 0 and top_k < V:
+        kth = jnp.sort(lf, axis=-1)[..., -top_k][..., None]
+        lf = jnp.where(lf >= kth, lf, L.NEG_INF)
+    p = jax.nn.softmax(lf, axis=-1)                       # (B, C, V)
+    r_acc, r_res, r_bonus = jax.random.split(rng, 3)
+    p_draft = jnp.take_along_axis(p[:, :k], drafts[..., None],
+                                  axis=-1)[..., 0]        # (B, k)
+    match = jax.random.uniform(r_acc, (B, k)) < p_draft
+    # residual resample: zero the rejected draft, renormalize -> exactly p
+    onehot = jax.nn.one_hot(drafts, V, dtype=bool)
+    resid = jnp.where(onehot, L.NEG_INF, lf[:, :k])
+    corr = jax.random.categorical(r_res, resid, axis=-1)  # (B, k)
+    bonus = jax.random.categorical(r_bonus, lf[:, k], axis=-1)
+    tgt = jnp.concatenate([corr, bonus[:, None]],
+                          axis=1).astype(jnp.int32)
+    return tgt, match
+
+
+def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
+                           s_max: int, slots: int = 1,
+                           scan_layers: bool = True,
+                           fsdp_serve: bool = False,
+                           temperature: float = 0.0, top_k: int = 0,
+                           block_size: int = 0,
+                           n_blocks: Optional[int] = None,
+                           attn_chunk: int = 0,
+                           ar_table: Optional[str] = None) -> BuiltStep:
+    """Speculative-decoding verify step: score ``k`` drafted tokens for
+    every slot in ONE fused pass over the chunked-prefill machinery.
+
+    (params, cache, state, drafts (slots, k), rng) ->
+    (emitted (slots, k+1), accepted (slots,) i32, cache').
+
+    The chunk input for each slot is ``[state.tokens, drafts]`` (C = k+1
+    tokens) written/attended at positions ``state.positions + [0..k]`` —
+    exactly the K/V writes sequential decode would perform if every draft
+    were accepted.  ``accepted`` is the longest verified draft prefix;
+    the caller takes ``emitted[:, :accepted+1]`` (accepted drafts + one
+    correction/bonus token) and rolls the rejected tail's K/V back
+    (``BlockAllocator.truncate`` on the paged path; on the dense path the
+    stale tail is overwritten before any read by the same write-ordering
+    invariant that covers chunk padding).
+
+    The per-layer all-reduces of this step carry C-times-wider messages
+    than one-token decode, so with ``ar_strategy="auto"`` the captured
+    ``ar_table`` re-dispatches every call site on the new sizes — the
+    workload-side shift into the paper's strategy-sensitive regime.
+
+    Dense (attention-only) families only, like ``prefill_chunk``.
+    """
+    cfg = ap.cfg
+    if cfg.family != "dense":
+        raise ValueError("speculative verify rides the chunked-prefill "
+                         f"path: dense families only, not {cfg.family!r}")
+    if k < 1:
+        raise ValueError(f"spec k must be >= 1, got {k}")
+    C = k + 1
+    ar_tuner = autotune.tuner_for(ar_table)
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    if mesh is not None and serve_ctx.dp:
+        raise ValueError("spec verify step cannot shard slots over dp "
+                         "axes; run one batcher per replica")
+    pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
+                                                      fsdp_serve)
+
+    def verify(params, cache, state, drafts, rng):
+        params = full_params(params)
+        tokens, positions = state["tokens"], state["positions"]
+        x = jnp.concatenate([tokens[:, None], drafts], axis=1)   # (B, C)
+        pos = positions[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        with autotune.using(ar_tuner):
+            logits, cache2 = prefill_chunk(
+                params, cache, x, pos, ap, serve_ctx,
+                scan_layers=scan_layers, layer_map=layer_map,
+                attn_chunk=attn_chunk, return_logits=True)
+        tgt, match = _spec_targets(logits, drafts, serve_ctx, cfg, rng,
+                                   temperature, top_k)
+        prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)    # (B, k)
+        accepted = prefix.sum(axis=1)                            # in [0, k]
+        idx = jnp.arange(C, dtype=jnp.int32)[None, :]
+        drafts_pad = jnp.pad(drafts, ((0, 0), (0, 1)))
+        # j < accepted: the (verified) draft; j == accepted: correction or
+        # bonus.  Greedy drafts equal tgt where accepted, so either branch
+        # is the plain greedy token there.
+        emitted = jnp.where(idx < accepted[:, None], drafts_pad, tgt)
+        return emitted, accepted.astype(jnp.int32), cache2
+
+    if mesh is None:
+        return BuiltStep(fn=verify, in_specs=None, out_specs=None,
+                         mesh=None, ctx=serve_ctx, donate_argnums=(1,))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    sspec = {"tokens": P(None), "positions": P(None),
+             "remaining": P(None), "active": P(None)}
+    in_specs = (pspecs, cspecs, sspec, P(None, None), P(None))
+    out_specs = (P(None, None), P(None), cspecs)
+    fn = shard_map(verify, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx, donate_argnums=(1,))
+
+
 def build_admit_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                      prompt_len: int, slots: int = 1,
                      scan_layers: bool = True, fsdp_serve: bool = False,
@@ -622,4 +759,4 @@ def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
 
 __all__ = ["build_train_step", "build_decode_step", "build_prefill",
            "build_cache_init", "build_serve_step", "build_admit_step",
-           "build_admit_chunk_step", "BuiltStep"]
+           "build_admit_chunk_step", "build_spec_verify_step", "BuiltStep"]

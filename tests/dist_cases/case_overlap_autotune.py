@@ -143,6 +143,36 @@ assert np.array_equal(toks["flat"], toks["auto+overlap"]), \
     "overlapped auto decode must reproduce flat greedy tokens"
 print("e2e overlapped auto decode parity OK")
 
+# --- int8 weight dequant under TP x the lossy-knob overlap rule ------------
+# quantized decode (dequant_layer inside the scan) with the lossy slow-axis
+# exchange enabled: overlap.collective_matmul must fall back to the
+# unchunked message (the quantization-group-boundary rule), so greedy
+# tokens cannot depend on the overlap knob even in the lossy + weight-quant
+# configuration.
+from repro.models.transformer import init_cache
+from repro.parallel.quant import quantize_params
+
+qparams = quantize_params(params)
+qtoks = {}
+for name, ov in (("plain", False), ("overlap", True)):
+    ctx_q = ParallelCtx(tp_fast=("model",), tp_slow=("pod",), ep=("model",),
+                        ar_strategy="hier_rd", compress_slow=True,
+                        overlap_matmul=ov, overlap_chunks=4)
+    dec_q = build_decode_step(ap, ctx_q, mesh, weight_quant=True)
+    cache_q = shard_map(lambda: init_cache(ap, 4, 24, local=True),
+                        mesh=mesh, in_specs=(),
+                        out_specs=dec_q.in_specs[1], check_vma=False)()
+    cur = jnp.full((4,), 7, jnp.int32)
+    seq = []
+    for i in range(6):
+        cur, cache_q = dec_q.jit()(qparams, cache_q,
+                                   cur, jnp.full((4,), i, jnp.int32))
+        seq.append(np.asarray(cur))
+    qtoks[name] = np.stack(seq)
+assert np.array_equal(qtoks["plain"], qtoks["overlap"]), \
+    "lossy compress_slow + weight-quant decode must not depend on overlap"
+print("weight-quant dequant under TP x lossy overlap rule OK")
+
 # --- fused Pallas GEMM+RD kernel (interpret mode; gated on support) --------
 from repro.core.compat import tpu_interpret_params
 interp = tpu_interpret_params()

@@ -100,6 +100,35 @@ def test_save_load_roundtrip(tmp_path):
     assert t2.table == t.table
 
 
+def test_save_load_roundtrip_lossy(tmp_path):
+    """An allow_lossy table must survive JSON persistence verbatim: the
+    knob itself, every compress_slow entry, and — after load — fresh
+    lookups must keep seeding with the lossy rule enabled."""
+    t = at.AutoTuner(cm.TPU_V5E, allow_lossy=True)
+    sizes = [64 * KB, 1 * MB, 16 * MB, 64 * MB, 256 * MB]
+    for s in sizes:
+        t.choose(s, 16, 4)
+    lossy_keys = {k for k, v in t.table.items() if v.compress_slow}
+    assert lossy_keys, "expected the lossy knob to fire at some size"
+    assert any(not v.compress_slow for v in t.table.values()), \
+        "latency-bound buckets must stay lossless"
+    p = os.path.join(tmp_path, "lossy_table.json")
+    t.save(p)
+    doc = json.load(open(p))
+    assert doc["allow_lossy"] is True
+    t2 = at.AutoTuner.load(p)
+    assert t2.allow_lossy is True
+    assert t2.table == t.table
+    assert {k for k, v in t2.table.items() if v.compress_slow} == lossy_keys
+    # a fresh bucket on the loaded tuner still honors allow_lossy
+    probe = 4 * max(sizes)
+    assert t2.choose(probe, 16, 4) == at.analytic_choice(
+        probe, 16, 4, cm.TPU_V5E, allow_lossy=True)
+    # and a lossless tuner never emits compress_slow at any probed size
+    t3 = at.AutoTuner(cm.TPU_V5E)
+    assert not any(t3.choose(s, 16, 4).compress_slow for s in sizes)
+
+
 def test_install_and_resolve_roundtrip():
     prev = at.install(at.AutoTuner(cm.TPU_V5E))
     try:
