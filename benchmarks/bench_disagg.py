@@ -1,0 +1,147 @@
+"""Disaggregated vs colocated serving benchmark: TTFT/TPOT attribution
+and per-pool all-reduce operating points.
+
+Two trace shapes bracket the paper's phase split (Sec. 3.5): a
+*decode-heavy* trace (short prompts, long generations — the latency-bound
+small-message AR regime) and a *prefill-heavy* trace (long prompts, short
+generations — bandwidth-bound large messages).  For each, the same trace
+replays through the colocated paged batcher and through the
+prefill/decode pool pair; tokens must match bitwise, and the disagg rows
+additionally report the TTFT split (prefill + transfer), handoff volume,
+and each pool's AR message-size bucket — the evidence that the two pools
+key their dispatch tables on different regimes of the strategy crossover
+(prefill bucket > decode bucket).
+
+    python -m benchmarks.bench_disagg --sweep   # writes BENCH_disagg.json
+    python -m benchmarks.bench_disagg           # quick smoke rows
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .common import emit
+
+S_MAX = 128
+SLOTS = 4
+N_REQ = 12
+TRACES = {
+    # name -> (mean_in, mean_out): the two ends of the phase split
+    "decode_heavy": (8, 24),
+    "prefill_heavy": (40, 4),
+}
+
+
+def _setup():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models.transformer import make_plan, init_params
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), ap)
+    return cfg, ap, params
+
+
+def _trace(cfg, mean_in, mean_out, seed=1):
+    from repro.inference.scheduler import make_trace
+    reqs = make_trace(N_REQ, mean_in=mean_in, mean_out=mean_out, rate=2.0,
+                      vocab=cfg.vocab_size, seed=seed)
+    for r in reqs:   # the smoke geometry must hold every sampled prompt
+        assert r.prompt.shape[0] + 1 <= S_MAX, r.prompt.shape
+    return reqs
+
+
+def _colocated_cell(cfg, ap, params, name, mean_in, mean_out):
+    from repro.inference.scheduler import ContinuousBatcher
+    sched = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
+                              block_size=8)
+    done = sched.run(_trace(cfg, mean_in, mean_out))
+    assert all(r.output is not None for r in done)
+    m = sched.metrics(done)
+    outputs = {r.rid: r.output for r in done}
+    row = {"trace": name, "mode": "colocated", "mean_in": mean_in,
+           "mean_out": mean_out, **m.to_dict()}
+    return row, outputs, m
+
+
+def _disagg_cell(cfg, ap, params, name, mean_in, mean_out, ref_outputs):
+    from repro.inference.disagg import (DisaggCoordinator, PrefillPool,
+                                        pool_tuner)
+    from repro.inference.scheduler import ContinuousBatcher
+    pool = PrefillPool(ap, params, s_max=S_MAX)
+    tuner = pool_tuner(None)
+    decode = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
+                               block_size=8, ar_table=tuner)
+    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner)
+    done = coord.run(_trace(cfg, mean_in, mean_out))
+    assert all(r.output is not None for r in done)
+    for r in done:   # the headline correctness bar: bitwise trace parity
+        assert np.array_equal(ref_outputs[r.rid], r.output), \
+            f"rid {r.rid}: disagg tokens diverge from colocated"
+    m = coord.metrics(done)
+    assert m.prefill_ar_bucket > m.decode_ar_bucket, \
+        (m.prefill_ar_bucket, m.decode_ar_bucket)
+    row = {"trace": name, "mode": "disagg", "mean_in": mean_in,
+           "mean_out": mean_out, **m.to_dict()}
+    return row, m
+
+
+def sweep(out_path: str = "BENCH_disagg.json"):
+    cfg, ap, params = _setup()
+    rows = []
+    for name, (mi, mo) in TRACES.items():
+        crow, ref, cm = _colocated_cell(cfg, ap, params, name, mi, mo)
+        rows.append(crow)
+        emit(f"disagg/{name}_colocated", cm.ttft_steps_p50,
+             f"tpot_p50={cm.tpot_steps_p50:.2f};steps={cm.steps}")
+        drow, dm = _disagg_cell(cfg, ap, params, name, mi, mo, ref)
+        rows.append(drow)
+        emit(f"disagg/{name}_disagg", dm.ttft_steps_p50,
+             f"prefill_p50={dm.prefill_steps_p50:.1f};"
+             f"transfer_p50={dm.transfer_steps_p50:.1f};"
+             f"tpot_p50={dm.tpot_steps_p50:.2f};"
+             f"ar_buckets={dm.prefill_ar_bucket}>{dm.decode_ar_bucket};"
+             f"xfer_kib={dm.transfer_bytes / 1024:.0f}")
+    summary = {
+        "parity": "bitwise (asserted per cell)",
+        "prefill_ar_bucket": max(r["prefill_ar_bucket"] for r in rows
+                                 if r["mode"] == "disagg"),
+        "decode_ar_bucket": max(r["decode_ar_bucket"] for r in rows
+                                if r["mode"] == "disagg"),
+    }
+    with open(out_path, "w") as f:
+        json.dump({"arch": "llama3.2-1b(smoke)", "s_max": S_MAX,
+                   "slots": SLOTS, "n_requests": N_REQ,
+                   "summary": summary, "rows": rows},
+                  f, indent=2, sort_keys=True, default=float)
+    emit("disagg/json_written", float(len(rows)), out_path)
+    return rows
+
+
+def run():
+    cfg, ap, params = _setup()
+    name, (mi, mo) = "decode_heavy", TRACES["decode_heavy"]
+    crow, ref, cm = _colocated_cell(cfg, ap, params, name, mi, mo)
+    drow, dm = _disagg_cell(cfg, ap, params, name, mi, mo, ref)
+    emit("disagg/smoke", dm.ttft_steps_p50,
+         f"colocated_ttft={cm.ttft_steps_p50:.1f};"
+         f"ar_buckets={dm.prefill_ar_bucket}>{dm.decode_ar_bucket}")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="both trace shapes x {colocated, disagg} "
+                         "(BENCH_disagg.json)")
+    ap.add_argument("--out", default="BENCH_disagg.json")
+    args = ap.parse_args(argv)
+    if args.sweep:
+        sweep(args.out)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@ baselines and fail on drift.
         --baseline-serve base/BENCH_serve.json \\
         --fresh-serve BENCH_serve.json \\
         [--baseline-spec base/BENCH_spec.json --fresh-spec BENCH_spec.json] \\
+        [--baseline-disagg base/BENCH_disagg.json \\
+         --fresh-disagg BENCH_disagg.json] \\
         [--threshold 0.25]
 
 What is compared (chosen to be meaningful on shared CI runners):
@@ -21,6 +23,10 @@ What is compared (chosen to be meaningful on shared CI runners):
   drift beyond the threshold is a real behavior change, not noise.
 * ``BENCH_spec.json`` (optional) — per-(k, drafter) acceptance rate and
   step counts, deterministic for the same reason.
+* ``BENCH_disagg.json`` (optional) — colocated-vs-disaggregated
+  logical-step metrics per trace shape, plus the per-pool AR buckets
+  (the prefill > decode bucket ordering is asserted inside the bench
+  itself; here we gate drift of the deterministic fields).
 
 Exit code 1 with a per-field report when any check trips.
 """
@@ -37,6 +43,11 @@ SERVE_FIELDS = ("ttft_steps_p50", "ttft_steps_p99", "tpot_steps_p50",
                 "peak_kv_tokens", "preemptions", "completed")
 SPEC_FIELDS = ("acceptance_rate", "accepted_tokens", "spec_steps", "steps",
                "total_new_tokens", "step_ratio")
+# Disagg rows are a union of ServeMetrics (colocated) and DisaggMetrics
+# (disagg) fields; _check_rows skips fields absent from a row's baseline.
+DISAGG_FIELDS = ("steps", "total_new_tokens", "completed", "preemptions",
+                 "ttft_steps_p50", "tpot_steps_p50", "handoffs",
+                 "transfer_bytes", "prefill_ar_bucket", "decode_ar_bucket")
 # Regret on CPU runners is noisy; gate the mean with extra absolute slack.
 REGRET_ABS_SLACK = 0.5
 
@@ -60,6 +71,10 @@ def _serve_key(row: Dict) -> tuple:
 
 def _spec_key(row: Dict) -> tuple:
     return (row.get("k"), row.get("drafter"))
+
+
+def _disagg_key(row: Dict) -> tuple:
+    return (row.get("trace"), row.get("mode"))
 
 
 def _check_rows(base_rows: List[Dict], fresh_rows: List[Dict], key_fn,
@@ -114,6 +129,8 @@ def main(argv=None) -> int:
     p.add_argument("--fresh-serve", required=True)
     p.add_argument("--baseline-spec", default=None)
     p.add_argument("--fresh-spec", default=None)
+    p.add_argument("--baseline-disagg", default=None)
+    p.add_argument("--fresh-disagg", default=None)
     p.add_argument("--threshold", type=float, default=0.25,
                    help="max allowed relative drift (default 0.25)")
     args = p.parse_args(argv)
@@ -128,6 +145,10 @@ def main(argv=None) -> int:
         _check_rows(_load(args.baseline_spec)["rows"],
                     _load(args.fresh_spec)["rows"], _spec_key, SPEC_FIELDS,
                     args.threshold, "spec", failures)
+    if args.baseline_disagg and args.fresh_disagg:
+        _check_rows(_load(args.baseline_disagg)["rows"],
+                    _load(args.fresh_disagg)["rows"], _disagg_key,
+                    DISAGG_FIELDS, args.threshold, "disagg", failures)
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)} violations):")

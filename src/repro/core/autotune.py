@@ -35,7 +35,7 @@ import json
 import math
 import os
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from . import comm_model as cm
 
@@ -148,6 +148,16 @@ def _bucket(msg_bytes: int) -> int:
     return max(8, int(math.ceil(math.log2(max(1, int(msg_bytes))))))
 
 
+def bucket_of(msg_bytes: int) -> int:
+    """Public form of the table's message-size bucketing (log2 exponent).
+
+    Lets callers report the operating point a workload *would* dispatch on
+    (e.g. per-pool AR buckets in disaggregated serving metrics) without a
+    mesh in the loop — the same exponent ``choose`` keys the table with.
+    """
+    return _bucket(msg_bytes)
+
+
 def _key(msg_bytes: int, fast_size: int, slow_size: int,
          dtype: str) -> str:
     return f"b{_bucket(msg_bytes)}/f{fast_size}/s{slow_size}/{dtype}"
@@ -180,6 +190,10 @@ class AutoTuner:
         self.allow_lossy = allow_lossy
         self.table: Dict[str, ARChoice] = {}
         self.measurements: Dict[str, List[_Measurement]] = {}
+        # trace-time lookup log: key -> times dispatched.  Lets a caller
+        # that owns a tuner instance (e.g. one serving pool) prove which
+        # message-size buckets its workload actually keyed the table on.
+        self.lookups: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     # -- lookup ------------------------------------------------------------
@@ -188,6 +202,7 @@ class AutoTuner:
                dtype: str = "bfloat16") -> ARChoice:
         key = _key(msg_bytes, fast_size, slow_size, dtype)
         with self._lock:
+            self.lookups[key] = self.lookups.get(key, 0) + 1
             hit = self.table.get(key)
             if hit is not None:
                 return hit
@@ -195,6 +210,12 @@ class AutoTuner:
                                      self.net, allow_lossy=self.allow_lossy)
             self.table[key] = choice
             return choice
+
+    def lookup_buckets(self) -> List[int]:
+        """Sorted message-size bucket exponents this tuner has dispatched
+        on (one entry per distinct table key seen by :meth:`choose`)."""
+        with self._lock:
+            return sorted({int(k.split("/")[0][1:]) for k in self.lookups})
 
     # -- measurement refinement -------------------------------------------
 
@@ -287,9 +308,13 @@ def install_from_path(path: Optional[str]) -> AutoTuner:
     return _ACTIVE
 
 
-def tuner_for(path: Optional[str]) -> AutoTuner:
+def tuner_for(path: Optional[Union[str, AutoTuner]]) -> AutoTuner:
     """Resolve (without installing) the tuner a build should capture:
-    an explicit path, else ``REPRO_AR_TABLE``, else the active default."""
+    an :class:`AutoTuner` instance passes through untouched (per-pool
+    tables in disaggregated serving), an explicit path loads, else
+    ``REPRO_AR_TABLE``, else the active default."""
+    if isinstance(path, AutoTuner):
+        return path
     if path is None:
         path = os.environ.get("REPRO_AR_TABLE")
     if path and os.path.exists(path):
@@ -324,5 +349,5 @@ def resolve(ctx, msg_bytes: int, fast_size: int, slow_size: int,
 __all__ = [
     "ARChoice", "AutoTuner", "predict_times", "analytic_choice",
     "active", "install", "install_from_path", "tuner_for", "using",
-    "resolve", "DISPATCHABLE",
+    "resolve", "bucket_of", "DISPATCHABLE",
 ]

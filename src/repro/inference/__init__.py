@@ -1,8 +1,11 @@
 """Inference runtime: batched engine, continuous-batching scheduler over the
-paged KV-cache subsystem, trace replay, and the event-driven cluster
-simulator used for the paper's strong-scaling and serving studies."""
+paged KV-cache subsystem, disaggregated prefill/decode pools, trace replay,
+and the event-driven cluster simulator used for the paper's strong-scaling
+and serving studies."""
 from .engine import InferenceEngine, GenerationResult
-from .kv_cache import BlockAllocator, CacheStats, paged_geometry
+from .disagg import DisaggCoordinator, DisaggMetrics, PrefillPool
+from .kv_cache import (BlockAllocator, CacheStats, KVBundle, export_slot,
+                       heads_to_slots, paged_geometry, slots_to_heads)
 from .scheduler import ContinuousBatcher, Request, ServeMetrics, make_trace
 from .speculative import (AdaptiveK, Drafter, ModelDrafter, NGramDrafter,
                           ReplayDrafter, make_drafter)
@@ -14,4 +17,6 @@ __all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
            "CacheStats", "paged_geometry", "ChipSpec", "A100", "GH200",
            "V5E", "ClusterSim", "simulate_batch_latency", "simulate_trace",
            "Drafter", "NGramDrafter", "ModelDrafter", "ReplayDrafter",
-           "AdaptiveK", "make_drafter"]
+           "AdaptiveK", "make_drafter", "DisaggCoordinator",
+           "DisaggMetrics", "PrefillPool", "KVBundle", "export_slot",
+           "slots_to_heads", "heads_to_slots"]

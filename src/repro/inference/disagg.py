@@ -1,0 +1,411 @@
+"""Disaggregated prefill/decode serving: two pools, two operating points.
+
+Prefill and decode stress the network in opposite ways (paper Sec. 3.5 and
+the communication characterizations in PAPERS.md): prefill is compute-bound
+with *large* per-layer all-reduce messages (prompt-length x d_model), while
+decode is latency-bound on *small* per-token all-reduces — exactly the
+128 KB-2 MB regime where the paper's strategy choice (hierarchical RD vs
+ring) matters most.  A colocated deployment forces one mesh layout and one
+``ar_table`` operating point onto both phases; this module splits them:
+
+* a :class:`PrefillPool` runs prompt prefills only (its own ``tp``/pods
+  mesh, its own AR dispatch table) and emits each finished context as a
+  layout-neutral :class:`~repro.inference.kv_cache.KVBundle` plus the
+  already-sampled first token;
+* a decode-side :class:`~repro.inference.scheduler.ContinuousBatcher`
+  (again its own mesh + table) imports bundles via
+  ``ContinuousBatcher.admit_prefilled`` — resharding between the pools'
+  GQA slot layouts happens in the bundle pack/unpack
+  (``kv_cache.slots_to_heads`` / ``heads_to_slots``), so the pools' TP
+  degrees are fully independent;
+* the :class:`DisaggCoordinator` is the router in between: it admits
+  arrivals to the prefill pool, moves completed contexts (KV bundle +
+  first token + position state) across the handoff queue into free decode
+  slots, routes decode-pool preemptions *back* to the prefill pool for
+  recompute, and tracks queue depths / transfer bytes / per-pool AR
+  message-size buckets.
+
+Correctness bar (enforced by tests/test_disagg.py and
+benchmarks/bench_disagg.py): a disaggregated greedy trace is **bitwise
+equal** to the colocated paged serve of the same trace, including with
+speculative decoding enabled on the decode pool — a slot's greedy tokens
+depend only on its own prompt and KV, and the handoff round-trips KV
+without dtype conversion.
+
+Scheduling model: the coordinator shares the batcher's logical step clock
+(1.0 per tick).  Each tick the prefill pool processes up to
+``prefill_per_step`` queued prompts, the handoff queue drains into free
+decode slots, and the decode pool runs one (plain or spec-verify) step.
+TTFT is attributed to the prefill pool + transfer wait; TPOT to the
+decode pool (DESIGN.md §9).
+
+Known gaps: dense (attention-only) families only — recurrent state
+handoff is not implemented (same restriction as chunked prefill / spec
+decode); sampled (temperature > 0) streams are deterministic per seed but
+not bit-identical to colocated serving (the two deployments consume their
+RNG streams in different orders); the handoff moves bundles through host
+memory (one device round-trip), standing in for a NIC/ICI transport.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import autotune
+from ..core.pcontext import ParallelCtx, LOCAL
+from ..parallel.steps import (build_admit_chunk_step, build_cache_init,
+                              build_prefill_only_step)
+from .kv_cache import KVBundle, export_slot, slots_to_heads
+from .scheduler import (ContinuousBatcher, Request, _percentile,
+                        run_chunked_prefill)
+
+
+def pool_tuner(ar_table) -> autotune.AutoTuner:
+    """Resolve a pool-private dispatch table: an AutoTuner instance or a
+    path resolves via :func:`autotune.tuner_for`; None seeds a fresh
+    analytic table instead of sharing the process-wide one.  Each pool
+    owning its tuner is what makes per-pool AR dispatch observable (the
+    tuner records the message-size buckets its pool keyed on) — which is
+    also why a missing table path is an error here rather than the
+    colocated builders' silent fallback: falling back to the shared
+    process-wide tuner would merge both pools' lookup logs."""
+    if isinstance(ar_table, str) and not os.path.exists(ar_table):
+        raise FileNotFoundError(f"pool ar_table not found: {ar_table!r}")
+    if ar_table is not None:
+        return autotune.tuner_for(ar_table)
+    base = autotune.active()
+    return autotune.AutoTuner(base.net, allow_lossy=base.allow_lossy)
+
+
+class PrefillPool:
+    """Prefill-only serving pool: prompt in, (first token, KVBundle) out.
+
+    ``admit_mode="full"`` runs one ``build_prefill_only_step`` executable
+    per distinct prompt length and packs the bundle straight from the
+    returned states; ``"chunked"`` feeds the prompt through the fixed-size
+    chunked-prefill executables into a private 1-slot cache (recompile-
+    free; ``block_size`` > 0 exercises the paged write path) and exports
+    from the cache.  Both paths produce identical bundles.
+    """
+
+    def __init__(self, ap, params, *, s_max: int, ctx: ParallelCtx = LOCAL,
+                 mesh=None, ar_table=None, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0, scan_layers: bool = True,
+                 fsdp_serve: bool = False, admit_mode: str = "full",
+                 admit_chunk: int = 32, block_size: int = 0):
+        self.ap, self.cfg, self.params = ap, ap.cfg, params
+        if self.cfg.family != "dense":
+            raise ValueError("disaggregated serving supports attention-"
+                             f"only dense families, not "
+                             f"{self.cfg.family!r}")
+        if admit_mode not in ("full", "chunked"):
+            raise ValueError(f"unknown admit_mode {admit_mode!r}")
+        if admit_mode == "chunked" and s_max % admit_chunk:
+            raise ValueError(f"s_max={s_max} must be a multiple of "
+                             f"admit_chunk={admit_chunk}")
+        self.s_max = s_max
+        self.ctx = ctx
+        self.mesh = mesh
+        self.temperature = temperature
+        self.top_k = top_k
+        self.admit_mode = admit_mode
+        self.admit_chunk = admit_chunk
+        self.block_size = block_size
+        self.tuner = pool_tuner(ar_table)
+        self._rng = jax.random.PRNGKey(seed)
+        self._step_kw = dict(scan_layers=scan_layers,
+                             fsdp_serve=fsdp_serve,
+                             temperature=temperature, top_k=top_k,
+                             ar_table=self.tuner)
+        self._full_fns: Dict[int, Any] = {}    # prompt_len -> jitted fn
+        self.cache = None
+        if admit_mode == "chunked":
+            # private 1-slot cache; n_blocks=None -> identity block table
+            # at full capacity, so no allocator is needed (one request at
+            # a time, overwritten in place)
+            geo = dict(slots=1, s_max=s_max, block_size=block_size,
+                       n_blocks=None, fsdp_serve=fsdp_serve)
+            self.cache = build_cache_init(ap, ctx, mesh, **geo).jit()()
+            kw = dict(self._step_kw)
+            kw.update(slots=1, s_max=s_max, block_size=block_size,
+                      n_blocks=None)
+            self._chunk_final = build_admit_chunk_step(
+                ap, ctx, mesh, chunk=admit_chunk, **kw).jit()
+            self._chunk_mid = build_admit_chunk_step(
+                ap, ctx, mesh, chunk=admit_chunk, sample=False, **kw).jit()
+            if block_size > 0:
+                self._table_row = 1 + np.arange(s_max // block_size,
+                                                dtype=np.int32)
+        # trace-scoped stats
+        self.prefills = 0
+        self.prompt_tokens = 0
+        self.wall_s = 0.0
+        self.analytic_buckets: set = set()
+
+    def _step_rng(self):
+        if self.temperature > 0.0:
+            self._rng, r = jax.random.split(self._rng)
+            return r
+        return self._rng
+
+    def _full_fn(self, prompt_len: int):
+        fn = self._full_fns.get(prompt_len)
+        if fn is None:
+            fn = build_prefill_only_step(self.ap, self.ctx, self.mesh,
+                                         prompt_len=prompt_len,
+                                         **self._step_kw).jit()
+            self._full_fns[prompt_len] = fn
+        return fn
+
+    def prefill(self, req: Request) -> Tuple[int, KVBundle]:
+        """Run one request's prompt; return (first token, KV bundle)."""
+        S = int(req.prompt.shape[0])
+        if S + 1 > self.s_max:
+            raise ValueError(f"prompt len {S} + 1 exceeds s_max="
+                             f"{self.s_max}")
+        t0 = time.perf_counter()
+        kv_map = self.ap.gqa.kv_map
+        if self.admit_mode == "full":
+            tok, k, v = self._full_fn(S)(
+                self.params, jnp.asarray(req.prompt[None]),
+                self._step_rng())
+            bundle = KVBundle(k=slots_to_heads(np.asarray(k)[:, 0], kv_map),
+                              v=slots_to_heads(np.asarray(v)[:, 0], kv_map))
+        else:
+            tok, self.cache = run_chunked_prefill(
+                self.params, self.cache, req.prompt, 0, self.admit_chunk,
+                self._chunk_mid, self._chunk_final, self._rng,
+                self._step_rng())
+            row = self._table_row[:] if self.block_size > 0 else None
+            bundle = export_slot(self.cache, 0, S, kv_map, table_row=row)
+        self.prefills += 1
+        self.prompt_tokens += S
+        self.wall_s += time.perf_counter() - t0
+        # the per-layer AR message of this prefill: (1, S, D) for the
+        # full-prompt pass, (1, admit_chunk, D) per chunk on the chunked
+        # path (pads included — chunks are fixed-size)
+        msg_tokens = S if self.admit_mode == "full" else self.admit_chunk
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        self.analytic_buckets.add(
+            autotune.bucket_of(msg_tokens * self.cfg.d_model * itemsize))
+        return int(np.asarray(tok)[0]), bundle
+
+    def reset_stats(self) -> None:
+        self.prefills = 0
+        self.prompt_tokens = 0
+        self.wall_s = 0.0
+        self.analytic_buckets = set()
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "prefills": self.prefills,
+            "prompt_tokens": self.prompt_tokens,
+            "wall_s": self.wall_s,
+            "mean_prompt_len": self.prompt_tokens / self.prefills
+            if self.prefills else 0.0,
+            "ar_buckets_analytic": sorted(self.analytic_buckets),
+            "ar_buckets_dispatched": self.tuner.lookup_buckets(),
+        }
+
+
+@dataclasses.dataclass
+class DisaggMetrics:
+    """Disaggregated trace-replay metrics with per-pool attribution.
+
+    TTFT decomposes into the prefill-pool component (queueing wait +
+    prefill tick) and the transfer component (handoff-queue wait until a
+    decode slot took the bundle); TPOT is purely the decode pool's
+    cadence.  ``*_ar_bucket`` report each pool's all-reduce operating
+    point as the max log2 message-size bucket it keyed (observed tuner
+    lookups on a mesh with ``ar_strategy="auto"``; the analytic bucket of
+    the pool's per-layer message otherwise) — the disaggregation payoff is
+    ``prefill_ar_bucket > decode_ar_bucket``: each pool's table serves a
+    different regime of the paper's strategy crossover.
+    """
+    requests: int
+    completed: int
+    total_new_tokens: int
+    steps: int
+    wall_s: float
+    throughput_tok_s: float
+    ttft_steps_p50: float
+    ttft_steps_p99: float
+    prefill_steps_p50: float     # TTFT component: wait + prefill tick
+    transfer_steps_p50: float    # TTFT component: handoff-queue wait
+    tpot_steps_p50: float
+    tpot_steps_p99: float
+    preemptions: int
+    handoffs: int
+    transfer_bytes: int
+    peak_ready_depth: int        # bundles waiting for a decode slot
+    peak_pending_depth: int      # prompts waiting for the prefill pool
+    prefill_ar_bucket: int
+    decode_ar_bucket: int
+    prefill_pool: Dict[str, Any]
+    decode_pool: Dict[str, Any]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class DisaggCoordinator:
+    """Router between a :class:`PrefillPool` and a decode-side
+    :class:`ContinuousBatcher` (see module docstring for the tick model).
+
+    ``decode`` must have been built with ``ar_table=<its own tuner>``
+    (see :func:`pool_tuner`) for per-pool dispatch attribution; pass that
+    tuner as ``decode_tuner`` so metrics can report its observed buckets.
+    """
+
+    def __init__(self, prefill: PrefillPool, decode: ContinuousBatcher, *,
+                 prefill_per_step: int = 1,
+                 decode_tuner: Optional[autotune.AutoTuner] = None):
+        if prefill.cfg.name != decode.cfg.name:
+            raise ValueError(f"pool configs differ: {prefill.cfg.name!r} "
+                             f"vs {decode.cfg.name!r}")
+        if decode.cfg.family != "dense":
+            raise ValueError("disaggregated serving supports dense "
+                             f"families only, not {decode.cfg.family!r}")
+        if prefill.s_max > decode.s_max:
+            # fail fast: a prompt the prefill pool accepts must always
+            # fit the decode pool (handoff needs T + 1 <= decode s_max)
+            raise ValueError(f"prefill s_max={prefill.s_max} exceeds "
+                             f"decode s_max={decode.s_max}; oversized "
+                             f"prefills could never hand off")
+        self.prefill = prefill
+        self.decode = decode
+        self.prefill_per_step = prefill_per_step
+        self.decode_tuner = decode_tuner
+        self._records: Dict[int, Dict[str, float]] = {}
+        self.transfer_bytes = 0
+        self.handoffs = 0
+        self.peak_ready = 0
+        self.peak_pending = 0
+        self._wall = 0.0
+
+    def run(self, requests: List[Request],
+            max_steps: int = 100000) -> List[Request]:
+        """Replay a trace (same contract as ``ContinuousBatcher.run``)."""
+        waiting = sorted(requests, key=lambda r: r.arrival_s)
+        qi = 0
+        now = 0.0
+        pending: List[Request] = []            # awaiting prefill
+        ready: List[Tuple[Request, int, KVBundle]] = []   # awaiting slot
+        self._records = {}
+        self.transfer_bytes = 0
+        self.handoffs = 0
+        self.peak_ready = 0
+        self.peak_pending = 0
+        decode = self.decode
+        decode.reset_run_stats()
+        self.prefill.reset_stats()
+        wall0 = time.perf_counter()
+        for _ in range(max_steps):
+            while qi < len(waiting) and waiting[qi].arrival_s <= now:
+                pending.append(waiting[qi])
+                qi += 1
+            for _ in range(self.prefill_per_step):
+                if not pending:
+                    break
+                req = pending.pop(0)
+                tok, bundle = self.prefill.prefill(req)
+                rec = self._records.setdefault(
+                    req.rid, {"arrival": req.arrival_s})
+                rec["prefill_step"] = now
+                self.handoffs += 1
+                self.transfer_bytes += bundle.nbytes
+                ready.append((req, tok, bundle))
+            # handoff queue -> free decode slots, FIFO; a bundle that does
+            # not fit the paged pool right now stays queued (head-of-line:
+            # admitting out of order would starve the oldest context)
+            for s in range(decode.slots):
+                if decode.active[s] is not None or not ready:
+                    continue
+                req, tok, bundle = ready[0]
+                if decode.admit_prefilled(s, req, bundle, tok, now):
+                    ready.pop(0)
+                    self._records[req.rid]["handoff_step"] = now
+            self.peak_ready = max(self.peak_ready, len(ready))
+            self.peak_pending = max(self.peak_pending, len(pending))
+            if qi >= len(waiting) and not pending and not ready \
+                    and all(a is None for a in decode.active):
+                break
+            decode.step(now)
+            # a preempted decode context lost its KV: route it back to the
+            # prefill pool for recompute (front of queue, preserving the
+            # eviction order — the colocated batcher's requeue-first rule)
+            if decode._requeue:
+                pending[:0] = decode._requeue
+                decode._requeue.clear()
+            now += 1.0
+        self._wall = time.perf_counter() - wall0
+        decode._wall_run = self._wall
+        return requests
+
+    # -- metrics -------------------------------------------------------------
+
+    def _decode_bucket(self) -> int:
+        """Decode pool's AR operating point: observed tuner lookups when
+        available, else the analytic per-layer message bucket (all slots
+        x 1 token x d_model; x (k+1) under speculative verify)."""
+        if self.decode_tuner is not None:
+            seen = self.decode_tuner.lookup_buckets()
+            if seen:
+                return max(seen)
+        cfg = self.decode.cfg
+        tokens = self.decode.slots
+        if self.decode.spec_mode:
+            tokens *= self.decode.spec_k + 1
+        itemsize = jnp.dtype(cfg.dtype).itemsize
+        return autotune.bucket_of(tokens * cfg.d_model * itemsize)
+
+    def _prefill_bucket(self) -> int:
+        seen = self.prefill.tuner.lookup_buckets()
+        if seen:
+            return max(seen)
+        return max(self.prefill.analytic_buckets, default=0)
+
+    def metrics(self, requests: List[Request]) -> DisaggMetrics:
+        dm = self.decode.metrics(requests)   # TPOT / cache / spec fields
+        done = [r for r in requests if r.output is not None]
+        pre, xfer, ttft = [], [], []
+        for r in done:
+            rec = self._records.get(r.rid)
+            if rec is None or "handoff_step" not in rec:
+                continue
+            p = max(rec["prefill_step"] - rec["arrival"], 0.0) + 1.0
+            t = rec["handoff_step"] - rec["prefill_step"]
+            pre.append(p)
+            xfer.append(t)
+            ttft.append(p + t)
+        return DisaggMetrics(
+            requests=len(requests), completed=len(done),
+            total_new_tokens=dm.total_new_tokens, steps=dm.steps,
+            wall_s=self._wall,
+            throughput_tok_s=dm.total_new_tokens / self._wall
+            if self._wall > 0 else 0.0,
+            ttft_steps_p50=_percentile(ttft, 50),
+            ttft_steps_p99=_percentile(ttft, 99),
+            prefill_steps_p50=_percentile(pre, 50),
+            transfer_steps_p50=_percentile(xfer, 50),
+            tpot_steps_p50=dm.tpot_steps_p50,
+            tpot_steps_p99=dm.tpot_steps_p99,
+            preemptions=dm.preemptions,
+            handoffs=self.handoffs,
+            transfer_bytes=self.transfer_bytes,
+            peak_ready_depth=self.peak_ready,
+            peak_pending_depth=self.peak_pending,
+            prefill_ar_bucket=self._prefill_bucket(),
+            decode_ar_bucket=self._decode_bucket(),
+            prefill_pool=self.prefill.stats(),
+            decode_pool=dm.to_dict())
+
+
+__all__ = ["PrefillPool", "DisaggCoordinator", "DisaggMetrics",
+           "pool_tuner"]

@@ -10,6 +10,11 @@ Runs in two modes:
 of prompts runs to completion (prefill + N decode steps) before the next
 batch starts — isolating GPU/TPU execution from scheduler effects, as in the
 paper's Sec. 3.2.
+
+Known gaps: the engine's paged cache is local-path only (identity block
+table, no allocator — mesh-path paged serving lives in
+``inference.scheduler.ContinuousBatcher``), and speculative ``generate``
+is dense-family-only with the draft model running local/replicated.
 """
 from __future__ import annotations
 

@@ -20,12 +20,33 @@ Split of responsibilities:
   decode/prefill steps gather K/V through it (see
   ``layers.attention_decode`` / ``attention_chunk_step``).
 
-Physical block 0 is reserved as the *trash block*: the table rows of freed
-or never-admitted slots point at it, so the (fixed-shape, whole-batch)
-decode step can keep scattering the stale slots' K/V writes somewhere
-harmless without any masking in the hot path.  Trash contents are never
-read — the attention mask only exposes positions ``<= pos`` of *active*
-slots, whose tables never contain block 0.
+Invariants this module (and everything downstream) relies on:
+
+* **block-0-trash**: physical block 0 is reserved as the *trash block*:
+  the table rows of freed or never-admitted slots point at it, so the
+  (fixed-shape, whole-batch) decode step can keep scattering the stale
+  slots' K/V writes somewhere harmless without any masking in the hot
+  path.  Trash contents are never read — the attention mask only exposes
+  positions ``<= pos`` of *active* slots, whose tables never contain
+  block 0.
+* **write-ordering**: freed / truncated / preempted blocks may hold stale
+  K/V when they return to the free list.  That is safe because a block is
+  only re-read through some slot's table after that slot has overwritten
+  every position its attention mask exposes (DESIGN.md §7) — the same
+  invariant that makes chunk-padding and inactive-slot writes harmless.
+
+This module also owns the **KV handoff format** for disaggregated
+prefill/decode serving (DESIGN.md §9): :class:`KVBundle` is a dense
+``(L, T, n_kv, head_dim)`` snapshot of one request's cache in *canonical
+real-head* layout — per-pool GQA slot layouts (which replicate/pad kv
+heads differently per TP degree) are packed via :func:`slots_to_heads` on
+export and re-expanded via :func:`heads_to_slots` on import, so a bundle
+produced by a ``tp=8`` prefill pool splices bit-exactly into a ``tp=2``
+decode pool.
+
+Known gaps: paging covers the self-attention K/V only (recurrent /
+encoder states stay dense per-slot), and a paged mesh cache cannot shard
+slots over dp axes — run one batcher per data-parallel replica.
 """
 from __future__ import annotations
 
@@ -271,4 +292,103 @@ def paged_geometry(s_max: int, block_size: int) -> int:
     return s_max // block_size
 
 
-__all__ = ["BlockAllocator", "CacheStats", "paged_geometry", "TRASH_BLOCK"]
+# ---------------------------------------------------------------------------
+# KV handoff bundles (disaggregated prefill/decode serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KVBundle:
+    """One request's KV cache in the canonical (layout-neutral) form.
+
+    ``k`` / ``v``: ``(L, T, n_kv, head_dim)`` arrays holding logical
+    positions ``[0, T)`` with one entry per *real* kv head — GQA slot
+    padding/replication removed (:func:`slots_to_heads`).  This is the
+    wire format of the prefill->decode handoff: independent of the source
+    pool's TP degree, block size, or slot index, so either pool can use
+    any mesh layout.  Dtype is the cache dtype (no conversion — bitwise
+    round-trips).
+    """
+    k: np.ndarray
+    v: np.ndarray
+
+    def __post_init__(self):
+        assert self.k.shape == self.v.shape and self.k.ndim == 4, \
+            (self.k.shape, self.v.shape)
+
+    @property
+    def n_tokens(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Transfer size of the handoff payload."""
+        return int(self.k.nbytes + self.v.nbytes)
+
+
+def slots_to_heads(arr: np.ndarray, kv_map) -> np.ndarray:
+    """Pack a GQA slot layout down to real kv heads.
+
+    ``arr``: ``(L, T, kv_slots, hd)``; ``kv_map``: per-slot original kv
+    head index or -1 (``GQAPlan.kv_map``, global layout).  Returns
+    ``(L, T, n_kv, hd)`` taking each head's first owning slot — replicated
+    slots hold identical values (replicated weights), dead slots are
+    dropped.
+    """
+    kv_map = np.asarray(kv_map)
+    n_kv = int(kv_map.max()) + 1
+    first = np.full((n_kv,), -1, np.int64)
+    for s, h in enumerate(kv_map):
+        if h >= 0 and first[h] < 0:
+            first[h] = s
+    assert (first >= 0).all(), f"kv_map covers only {first} of {n_kv} heads"
+    return np.ascontiguousarray(arr[:, :, first])
+
+
+def heads_to_slots(arr: np.ndarray, kv_map) -> np.ndarray:
+    """Expand canonical real-head KV back into a GQA slot layout.
+
+    Inverse of :func:`slots_to_heads` for the *target* pool's
+    ``GQAPlan.kv_map``: replicated heads are duplicated into every slot
+    that owns them, dead slots are zero — exactly what a direct prefill
+    under the target layout would have written (dead-slot weights are
+    zero, so their K/V are zero).
+    """
+    kv_map = np.asarray(kv_map)
+    out = np.array(arr[:, :, np.maximum(kv_map, 0)])
+    out[:, :, kv_map < 0] = 0
+    return out
+
+
+def export_slot(cache, slot: int, n_tokens: int, kv_map,
+                table_row=None) -> KVBundle:
+    """Pack one slot's live KV out of a (device) cache into a bundle.
+
+    ``cache``: the batcher's cache pytree (dense or paged, local or the
+    global view of a mesh cache).  ``table_row``: the slot's physical
+    block row (``BlockAllocator.table[slot]`` — or the identity table row
+    for an allocator-free paged cache); required iff the cache is paged.
+    Only blocks/rows owned by ``slot`` are read, so trash-block contents
+    and other slots' K/V can never leak into the bundle.
+    """
+    T = int(n_tokens)
+    if "block_tbl" in cache:
+        assert table_row is not None, "paged export needs the slot's row"
+        bs = cache["k"].shape[2]
+        nb = -(-T // bs)
+        rows = np.asarray(table_row[:nb], np.int32)
+        assert TRASH_BLOCK not in rows, "exporting an unowned (trash) block"
+        def pull(phys):
+            L, _, _, u, hd = phys.shape
+            gathered = phys[:, rows]                     # (L, nb, bs, u, hd)
+            return np.asarray(gathered).reshape(L, nb * bs, u, hd)[:, :T]
+        k, v = pull(cache["k"]), pull(cache["v"])
+    else:
+        k = np.asarray(cache["k"][:, slot, :T])
+        v = np.asarray(cache["v"][:, slot, :T])
+    return KVBundle(k=slots_to_heads(k, kv_map),
+                    v=slots_to_heads(v, kv_map))
+
+
+__all__ = ["BlockAllocator", "CacheStats", "KVBundle", "paged_geometry",
+           "export_slot", "slots_to_heads", "heads_to_slots", "TRASH_BLOCK"]

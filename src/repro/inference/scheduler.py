@@ -31,9 +31,24 @@ This is the *unified serving stack* over the paged KV-cache subsystem:
   ``BlockAllocator.truncate``, and the per-layer all-reduce is amortized
   over up to ``spec_k + 1`` tokens per step (DESIGN.md §8).
 
+* for disaggregated serving, :meth:`ContinuousBatcher.admit_prefilled`
+  admits a context prefilled by *another pool*: a canonical
+  :class:`~repro.inference.kv_cache.KVBundle` is resharded into this
+  batcher's GQA slot layout and spliced on device
+  (``build_kv_splice_step``); ``inference.disagg.DisaggCoordinator``
+  drives the batcher step-by-step in that deployment (DESIGN.md §9).
+
 Scheduling time is a logical step clock (1.0 per engine step) so traces
 replay deterministically; wall-clock timestamps are recorded alongside for
 TTFT / TPOT reporting (see :class:`ServeMetrics`).
+
+Invariants inherited from the cache layer (see ``kv_cache``): block-0 is
+trash (stale-slot writes are routed there, never read), and freed blocks
+may hold stale K/V (write-ordering: re-read only after overwrite).  Known
+gaps: chunked admission and speculative decoding are dense-family-only
+(recurrent states cannot skip pads; MoE routing is load-dependent), and a
+paged mesh cache cannot shard slots over dp axes — run one batcher per
+data-parallel replica.
 """
 from __future__ import annotations
 
@@ -47,9 +62,10 @@ import numpy as np
 
 from ..core.pcontext import ParallelCtx, LOCAL
 from ..parallel.steps import (build_admit_chunk_step, build_admit_step,
-                              build_cache_init, build_serve_step,
-                              build_spec_verify_step)
-from .kv_cache import BlockAllocator, paged_geometry
+                              build_cache_init, build_kv_splice_step,
+                              build_serve_step, build_spec_verify_step)
+from .kv_cache import (BlockAllocator, KVBundle, heads_to_slots,
+                       paged_geometry)
 from .speculative import AdaptiveK, Drafter, make_drafter
 
 
@@ -71,6 +87,35 @@ class Request:
 def _percentile(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
         else float("nan")
+
+
+def run_chunked_prefill(params, cache, prompt: np.ndarray, slot, chunk: int,
+                        mid_fn, final_fn, mid_rng, final_rng):
+    """Drive a prompt through the chunked-prefill executables into cache
+    row ``slot``: intermediate chunks via the logits-free ``mid_fn``
+    (``mid_rng`` untouched — nothing samples), the final chunk via
+    ``final_fn`` which samples the first token at in-chunk index
+    ``(S-1) % chunk``.  Shared by colocated admission
+    (:meth:`ContinuousBatcher._admit`) and the disaggregated prefill pool
+    — the bitwise-parity guarantee between those deployments depends on
+    this being ONE code path.  Returns (first_token_dev, cache)."""
+    S = int(prompt.shape[0])
+    padded = np.zeros((-(-S // chunk) * chunk,), np.int32)
+    padded[:S] = prompt
+    n_chunks = padded.shape[0] // chunk
+    last = jnp.int32((S - 1) % chunk)
+    slot = jnp.int32(slot)
+    tok = None
+    for i in range(n_chunks):
+        x = jnp.asarray(padded[None, i * chunk:(i + 1) * chunk])
+        pos = jnp.arange(i * chunk, (i + 1) * chunk,
+                         dtype=jnp.int32)[None]
+        if i < n_chunks - 1:
+            cache = mid_fn(params, cache, x, pos, slot, last, mid_rng)
+        else:
+            tok, cache = final_fn(params, cache, x, pos, slot, last,
+                                  final_rng)
+    return tok, cache
 
 
 @dataclasses.dataclass
@@ -225,6 +270,7 @@ class ContinuousBatcher:
                 self._speck = AdaptiveK(ks=tuple(sorted(
                     {k2 for k2 in (2, 4, 8) if k2 <= spec_k} | {spec_k})))
         self._admit_full: Dict[int, Any] = {}   # prompt_len -> jitted fn
+        self._splice_fns: Dict[int, Any] = {}   # handoff len -> jitted fn
         self._admit_chunked = None
         if admit_mode == "chunked":
             # final chunk samples the first token; intermediate chunks run
@@ -297,29 +343,23 @@ class ContinuousBatcher:
             if not self.alloc.ensure(slot, S + 1):
                 return False
             self._sync_table()
-        slot_dev = jnp.int32(slot)
         if self.admit_mode == "chunked":
-            C = self.admit_chunk
-            padded = np.zeros((-(-S // C) * C,), np.int32)
-            padded[:S] = req.prompt
-            tok = None
-            n_chunks = padded.shape[0] // C
-            for i in range(n_chunks):
-                chunk = jnp.asarray(padded[None, i * C:(i + 1) * C])
-                pos = jnp.arange(i * C, (i + 1) * C, dtype=jnp.int32)[None]
-                if i < n_chunks - 1:   # rng untouched: nothing samples
-                    self.cache = self._admit_chunked_mid(
-                        self.params, self.cache, chunk, pos, slot_dev,
-                        jnp.int32((S - 1) % C), self._rng)
-                else:
-                    tok, self.cache = self._admit_chunked(
-                        self.params, self.cache, chunk, pos, slot_dev,
-                        jnp.int32((S - 1) % C), self._step_rng())
+            tok, self.cache = run_chunked_prefill(
+                self.params, self.cache, req.prompt, slot,
+                self.admit_chunk, self._admit_chunked_mid,
+                self._admit_chunked, self._rng, self._step_rng())
         else:
             tok, self.cache = self._admit_fn(S)(
                 self.params, self.cache, jnp.asarray(req.prompt[None]),
-                slot_dev, self._step_rng())
-        nxt = int(np.asarray(tok)[0])
+                jnp.int32(slot), self._step_rng())
+        self._activate(slot, req, int(np.asarray(tok)[0]), S, now)
+        return True
+
+    def _activate(self, slot: int, req: Request, nxt: int, S: int,
+                  now: float) -> None:
+        """Post-admission bookkeeping shared by local prefill admission and
+        disaggregated handoff admission: the slot holds ``req`` at position
+        ``S`` with first token ``nxt`` already emitted."""
         self.active[slot] = req
         self.positions[slot] = S
         self.remaining[slot] = req.max_new - 1
@@ -335,6 +375,39 @@ class ContinuousBatcher:
         self._dirty = True
         if self.remaining[slot] == 0:   # max_new == 1: prefill token only
             self._release(slot, now)
+
+    def _splice_fn(self, n_tokens: int):
+        fn = self._splice_fns.get(n_tokens)
+        if fn is None:
+            kw = {k: v for k, v in self._admit_kw.items()
+                  if k in ("s_max", "slots", "block_size", "n_blocks",
+                           "fsdp_serve")}
+            fn = build_kv_splice_step(self.ap, self.ctx, self.mesh,
+                                      n_tokens=n_tokens, **kw).jit()
+            self._splice_fns[n_tokens] = fn
+        return fn
+
+    def admit_prefilled(self, slot: int, req: Request, bundle: KVBundle,
+                        first_token: int, now: float) -> bool:
+        """Disaggregated handoff admission: splice an imported KV bundle
+        (canonical real-head layout, from another pool's prefill) into
+        ``slot`` and activate the request with its already-sampled first
+        token.  Returns False (no state change) when the paged pool cannot
+        hold the context right now — the coordinator keeps it queued."""
+        S = bundle.n_tokens
+        if S + 1 > self.s_max:
+            raise ValueError(f"handoff len {S} + 1 exceeds s_max="
+                             f"{self.s_max}")
+        if self.alloc is not None:
+            # +1: the first decode write lands at position S
+            if not self.alloc.ensure(slot, S + 1):
+                return False
+            self._sync_table()
+        k = heads_to_slots(bundle.k, self.ap.gqa.kv_map)[:, None]
+        v = heads_to_slots(bundle.v, self.ap.gqa.kv_map)[:, None]
+        self.cache = self._splice_fn(S)(
+            self.cache, jnp.asarray(k), jnp.asarray(v), jnp.int32(slot))
+        self._activate(slot, req, int(first_token), S, now)
         return True
 
     def _release(self, slot: int, now: float):
@@ -520,6 +593,23 @@ class ContinuousBatcher:
 
     # -- trace replay --------------------------------------------------------
 
+    def reset_run_stats(self) -> None:
+        """Reset per-run accounting (step counts, spec counters, allocator
+        trace stats) so :meth:`metrics` reflects one trace only.  Called by
+        :meth:`run` on a drained batcher, and by an external driver
+        (``inference.disagg.DisaggCoordinator``) that steps the batcher
+        itself; current slot ownership is untouched."""
+        self.steps_run = 0
+        self._peak_occupied = 0
+        self.outputs = {}
+        self._spec_steps = self._spec_drafted = 0
+        self._spec_accepted = self._spec_k_sum = 0
+        if self.drafter is not None:
+            self.drafter.calls = self.drafter.hits = 0
+        if self.alloc is not None:
+            self.alloc.reset_stats()
+        self._wall0 = time.perf_counter()
+
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
         """Replay a trace (requests sorted by arrival) to completion."""
@@ -527,17 +617,8 @@ class ContinuousBatcher:
         qi = 0
         now = 0.0
         if not self.active_mask.any() and not self._requeue:
-            # fresh replay on a drained batcher: reset per-run accounting
-            # so metrics() reflects this trace only
-            self.steps_run = 0
-            self._peak_occupied = 0
-            self.outputs = {}
-            self._spec_steps = self._spec_drafted = 0
-            self._spec_accepted = self._spec_k_sum = 0
-            if self.drafter is not None:
-                self.drafter.calls = self.drafter.hits = 0
-            if self.alloc is not None:
-                self.alloc.reset_stats()
+            # fresh replay on a drained batcher
+            self.reset_run_stats()
         self._wall0 = time.perf_counter()
         for _ in range(max_steps):
             # admit preempted requests first, then due arrivals
@@ -647,4 +728,5 @@ def make_trace(n_requests: int, *, mean_in: int, mean_out: int,
     return reqs
 
 
-__all__ = ["ContinuousBatcher", "Request", "ServeMetrics", "make_trace"]
+__all__ = ["ContinuousBatcher", "Request", "ServeMetrics", "make_trace",
+           "run_chunked_prefill"]

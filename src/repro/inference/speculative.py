@@ -32,6 +32,10 @@ Drafters (``make_drafter``):
 
 All drafters are deterministic (a delta proposal distribution), which is
 what makes the sampled-mode rejection rule in ``_spec_targets`` exact.
+
+Known gaps: the verify pass rides the chunked-prefill path and is
+therefore dense-family-only, and the draft model runs local/replicated
+(not mesh-sharded) — it is tiny relative to the target by construction.
 """
 from __future__ import annotations
 

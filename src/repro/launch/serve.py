@@ -1,4 +1,6 @@
-"""Serving driver: batched generation or trace-replay continuous batching.
+"""Serving driver: batched generation, trace-replay continuous batching,
+or disaggregated prefill/decode pools (see docs/serving.md for the full
+flag reference).
 
     python -m repro.launch.serve --arch llama3.2-1b --smoke --mode batch
     python -m repro.launch.serve --arch llama3.2-1b --smoke --mode trace \
@@ -7,6 +9,9 @@
         --pods 2 --block-size 8   # under XLA_FLAGS=...device_count=8
     python -m repro.launch.serve --arch llama3.2-1b --mode trace \
         --spec-mode ngram --spec-k 4   # speculative decoding (DESIGN.md §8)
+    python -m repro.launch.serve --arch llama3.2-1b --mode trace --disagg \
+        --prefill-tp 8 --prefill-pods 2 --decode-tp 4 --block-size 8
+        # disaggregated pools (DESIGN.md §9); per-pool mesh + ar_table
 
 Trace mode replays a BurstGPT-style synthetic trace through the
 continuous batcher (local path, or the mesh path when --tp > 1) and
@@ -17,7 +22,10 @@ reports:
 
 both as p50/p99 in logical engine steps (deterministic) and in wall
 seconds (steps x measured mean step time), plus cache utilization and
-preemption counts from the paged KV allocator.
+preemption counts from the paged KV allocator.  With ``--disagg`` the
+TTFT is attributed to the prefill pool + handoff transfer, TPOT to the
+decode pool, and each pool reports its own all-reduce message-size
+buckets.
 """
 from __future__ import annotations
 
@@ -156,7 +164,87 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
     return done, m
 
 
-def main(argv=None):
+def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
+               slots: int = 4, s_max: int = 128, block_size: int = 0,
+               n_blocks=None, ar_strategy: str = "flat", ar_table=None,
+               overlap: bool = False,
+               prefill_tp: int = 1, prefill_pods: int = 1,
+               decode_tp: int = 1, decode_pods: int = 1,
+               prefill_ar_table=None, decode_ar_table=None,
+               temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+               admit_mode: str = "full", admit_chunk: int = 32,
+               mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
+               prefill_per_step: int = 1,
+               spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
+               draft_arch: str = "llama3.2-1b", json_out=None):
+    """Disaggregated trace serving: prefill pool + decode pool, each with
+    its own mesh layout and AR dispatch table (DESIGN.md §9).
+    ``ar_table`` seeds BOTH pools when a per-pool table is not given."""
+    from ..inference.disagg import (DisaggCoordinator, PrefillPool,
+                                    pool_tuner)
+    prefill_ar_table = prefill_ar_table or ar_table
+    decode_ar_table = decode_ar_table or ar_table
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    mesh_p, ctx_p, tp_p = _mesh_and_ctx(prefill_tp, prefill_pods,
+                                        ar_strategy, overlap)
+    mesh_d, ctx_d, tp_d = _mesh_and_ctx(decode_tp, decode_pods,
+                                        ar_strategy, overlap)
+    # per-pool plans + params: same weights (same key), each pool's layout
+    ap_p = make_plan(cfg, tp_p)
+    ap_d = make_plan(cfg, tp_d)
+    params_p = init_params(jax.random.PRNGKey(seed), ap_p)
+    params_d = params_p if tp_d == tp_p \
+        else init_params(jax.random.PRNGKey(seed), ap_d)
+    tuner_p = pool_tuner(prefill_ar_table)
+    tuner_d = pool_tuner(decode_ar_table)
+    pool = PrefillPool(ap_p, params_p, s_max=s_max, ctx=ctx_p, mesh=mesh_p,
+                       ar_table=tuner_p, temperature=temperature,
+                       top_k=top_k, seed=seed, admit_mode=admit_mode,
+                       admit_chunk=admit_chunk, block_size=block_size)
+    decode = ContinuousBatcher(
+        ap_d, params_d, slots=slots, s_max=s_max, ctx=ctx_d, mesh=mesh_d,
+        block_size=block_size, n_blocks=n_blocks, ar_table=tuner_d,
+        temperature=temperature, top_k=top_k, seed=seed,
+        spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
+        draft_arch=draft_arch)
+    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d,
+                              prefill_per_step=prefill_per_step)
+    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, vocab=cfg.vocab_size, seed=seed)
+    done = coord.run(reqs)
+    assert all(r.output is not None for r in done), "requests dropped!"
+    m = coord.metrics(done)
+    layout = f"paged(bs={block_size})" if decode.paged else "dense"
+    spec = f" spec={spec_mode}(k={spec_k})" if spec_mode else ""
+    print(f"[serve] disagg {arch} [{layout} ar={ar_strategy} "
+          f"prefill tp={tp_p}x{prefill_pods} decode tp={tp_d}x"
+          f"{decode_pods}{spec}]: {m.completed}/{m.requests} reqs, "
+          f"{m.total_new_tokens} tokens in {m.wall_s:.1f}s "
+          f"({m.throughput_tok_s:.0f} tok/s, {m.steps} decode steps)")
+    print(f"[serve]   TTFT p50/p99: {m.ttft_steps_p50:.1f}/"
+          f"{m.ttft_steps_p99:.1f} steps "
+          f"(prefill {m.prefill_steps_p50:.1f} + transfer "
+          f"{m.transfer_steps_p50:.1f} at p50) | TPOT p50/p99: "
+          f"{m.tpot_steps_p50:.2f}/{m.tpot_steps_p99:.2f} steps "
+          f"[decode pool]")
+    print(f"[serve]   handoff: {m.handoffs} bundles, "
+          f"{m.transfer_bytes / 1024:.0f} KiB, ready/pending queue peaks "
+          f"{m.peak_ready_depth}/{m.peak_pending_depth}, "
+          f"{m.preemptions} decode-pool preemptions")
+    print(f"[serve]   AR buckets: prefill pool 2^{m.prefill_ar_bucket} "
+          f"vs decode pool 2^{m.decode_ar_bucket} "
+          f"(prefill {m.prefill_pool['ar_buckets_analytic']} analytic, "
+          f"{m.prefill_pool['ar_buckets_dispatched']} dispatched)")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(m.to_dict(), f, indent=2, default=float)
+        print(f"[serve]   metrics -> {json_out}")
+    return done, m
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI (introspected by tools/check_docs.py: every flag
+    added here must be documented in docs/serving.md)."""
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", choices=list(ARCH_IDS), required=True)
     p.add_argument("--mode", choices=["batch", "trace"], default="batch")
@@ -200,11 +288,54 @@ def main(argv=None):
                    help="registry arch for --spec-mode draft")
     p.add_argument("--json", "--metrics-json", dest="json_out",
                    default=None, help="write trace metrics JSON here")
-    args = p.parse_args(argv)
+    # -- disaggregated prefill/decode pools (trace mode only) ------------
+    p.add_argument("--disagg", action="store_true",
+                   help="disaggregated serving: prefill pool + decode "
+                        "pool with per-pool mesh layouts and AR tables")
+    p.add_argument("--prefill-tp", type=int, default=1,
+                   help="prefill-pool tensor-parallel ways (--disagg)")
+    p.add_argument("--prefill-pods", type=int, default=1,
+                   help="prefill-pool pod split of --prefill-tp")
+    p.add_argument("--decode-tp", type=int, default=1,
+                   help="decode-pool tensor-parallel ways (--disagg)")
+    p.add_argument("--decode-pods", type=int, default=1,
+                   help="decode-pool pod split of --decode-tp")
+    p.add_argument("--prefill-ar-table", default=None,
+                   help="persisted autotune table for the prefill pool")
+    p.add_argument("--decode-ar-table", default=None,
+                   help="persisted autotune table for the decode pool")
+    p.add_argument("--prefill-per-step", type=int, default=1,
+                   help="prompts the prefill pool admits per logical step")
+    return p
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
     spec_mode = None if args.spec_mode == "none" else args.spec_mode
     if args.mode == "batch" and args.spec_adaptive:
         raise SystemExit("--spec-adaptive is trace-mode only (the engine "
                          "runs a fixed --spec-k)")
+    if args.disagg:
+        if args.mode != "trace":
+            raise SystemExit("--disagg is trace-mode only")
+        run_disagg(args.arch, smoke=args.smoke, n_requests=args.requests,
+                   slots=args.slots, s_max=args.s_max,
+                   block_size=args.block_size, n_blocks=args.n_blocks,
+                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
+                   overlap=args.overlap,
+                   prefill_tp=args.prefill_tp,
+                   prefill_pods=args.prefill_pods,
+                   decode_tp=args.decode_tp, decode_pods=args.decode_pods,
+                   prefill_ar_table=args.prefill_ar_table,
+                   decode_ar_table=args.decode_ar_table,
+                   temperature=args.temperature, top_k=args.top_k,
+                   seed=args.seed, admit_mode=args.admit_mode,
+                   admit_chunk=args.admit_chunk, rate=args.rate,
+                   prefill_per_step=args.prefill_per_step,
+                   spec_mode=spec_mode, spec_k=args.spec_k,
+                   spec_adaptive=args.spec_adaptive,
+                   draft_arch=args.draft_arch, json_out=args.json_out)
+        return 0
     if args.mode == "batch":
         run_batch(args.arch, smoke=args.smoke, batch=args.batch,
                   prompt_len=args.prompt_len, max_new=args.max_new,

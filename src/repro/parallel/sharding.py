@@ -5,6 +5,13 @@ Rules are name-based on the leaf path.  Every rule gives the *TP* dimension
 assignment; the FSDP dimension is then chosen automatically as the largest
 remaining dimension divisible by the FSDP-axes size (small or indivisible
 leaves stay replicated across FSDP — they are negligible).
+
+Invariants / known gaps: a *paged* decode cache shards its physical K/V
+block pool on the head dim only and can never ride a dp batch axis (the
+pool is one shared resource indexed by a host-managed table — serving
+replicas are separate processes, not dp shards); cross-attention weights
+stay FSDP-replicated (their K/V are precomputed over vmapped stacked
+layers, which cannot nest a per-layer all-gather).
 """
 from __future__ import annotations
 
@@ -223,5 +230,16 @@ def data_specs(ctx: ParallelCtx, *, ndim: int = 2):
     return P(*((dp,) + (None,) * (ndim - 1)))
 
 
+def kv_states_spec(ctx: ParallelCtx):
+    """Spec for per-layer attention K/V states ``(L, B, S, U, hd)`` moving
+    in/out of a step as a standalone value (prefill-only outputs, handoff
+    splice inputs): kv-slot dim over TP, everything else replicated —
+    matching the ``k``/``v`` rule in :func:`cache_spec` without a dp batch
+    axis (handoff payloads are per-request, not batch-sharded)."""
+    tp = ctx.tp_slow + ctx.tp_fast
+    tp_s = tp if len(tp) > 1 else (tp[0] if tp else None)
+    return P(None, None, None, tp_s, None)
+
+
 __all__ = ["param_specs", "param_fsdp_dims", "gather_params", "cache_spec",
-           "data_specs", "TP_RULES"]
+           "data_specs", "kv_states_spec", "TP_RULES"]

@@ -10,6 +10,22 @@ paper's recursive-doubling strategy (optionally int8-compressed).
 
 Decode step = Megatron-style TP with the per-layer all-reduce strategy under
 study (flat | hier_ring | hier_rd | hier_rd_halving).
+
+Serving-stack builders (cache init / admission / fused serve / spec verify
+/ prefill-only / KV splice) share two conventions: ``mesh=None`` returns a
+plain jit-able callable over the LOCAL ctx while a mesh returns the
+shard_map'd production step (one engine, two deployments), and every
+builder captures its ``ar_table`` at build time (``autotune.using``) so
+``ar_strategy="auto"`` call sites resolve against the right table even
+when jit defers tracing — in disaggregated serving the prefill and decode
+pools' builders therefore dispatch against *different* tables.
+
+Invariants the serve-side steps rely on (details in ``inference.kv_cache``
+and DESIGN.md §7-§9): stale-slot / pad / rejected-draft K/V writes are
+harmless (trash-routed on the paged path, write-order-covered on the dense
+path), and a paged cache's block table rides outside the layer scan.
+Known gaps: chunked admission, spec verify, and the disaggregation steps
+are dense-family-only; serve steps cannot shard slots over dp axes.
 """
 from __future__ import annotations
 
@@ -648,6 +664,102 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
                      mesh=mesh, ctx=serve_ctx, donate_argnums=(1,))
 
 
+def build_prefill_only_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                            prompt_len: int, scan_layers: bool = True,
+                            fsdp_serve: bool = False,
+                            temperature: float = 0.0, top_k: int = 0,
+                            ar_table=None) -> BuiltStep:
+    """Prefill-pool step for disaggregated serving: run one request's
+    prompt, sample the first token, and hand the per-layer K/V states
+    straight back — no decode loop, no persistent serving cache.
+
+    (params, prompt (1, prompt_len), rng) -> (first_token (1,),
+    k (L, 1, prompt_len, U, hd), v (same)).
+
+    The returned states are the raw material of the KV handoff
+    (``inference.kv_cache.export-from-states`` -> :class:`KVBundle` ->
+    decode-pool splice); on a mesh the kv-slot dim comes back TP-gathered
+    per ``sharding.kv_states_spec`` so the host sees the full global slot
+    layout.  ``prompt_len`` is static — one executable per distinct
+    length, cached by the pool (the chunked-admission path avoids the
+    recompiles; dense families only either way).  Because this step runs
+    on the *prefill pool's* mesh with its own ``ar_table``, its per-layer
+    all-reduces dispatch on prompt-sized messages — the bandwidth-bound
+    end of the paper's strategy crossover — independent of the decode
+    pool's operating point.
+    """
+    cfg = ap.cfg
+    if cfg.family != "dense":
+        raise ValueError("disaggregated prefill is attention-only: dense "
+                         f"families only, not {cfg.family!r}")
+    ar_tuner = autotune.tuner_for(ar_table)
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
+                                                      fsdp_serve)
+
+    def prefill_only(params, prompt, rng):
+        params = full_params(params)
+        with autotune.using(ar_tuner):
+            logits, _, states, _ = forward_lm(
+                params, prompt, ap, serve_ctx, scan_layers=scan_layers,
+                collect_state=True, layer_map=layer_map,
+                chunk=1024 if prompt_len > 8192 else 0)
+        nxt = _sample_next(logits[:, -1], serve_ctx, cfg, rng,
+                           temperature, top_k)
+        return nxt, states["k"], states["v"]
+
+    if mesh is None:
+        return BuiltStep(fn=prefill_only, in_specs=None, out_specs=None,
+                         mesh=None, ctx=serve_ctx)
+    kv_spec = shd.kv_states_spec(serve_ctx)
+    in_specs = (pspecs, P(None, None), P(None))
+    out_specs = (P(None), kv_spec, kv_spec)
+    fn = shard_map(prefill_only, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
+                     mesh=mesh, ctx=serve_ctx)
+
+
+def build_kv_splice_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
+                         n_tokens: int, s_max: int, slots: int = 1,
+                         block_size: int = 0,
+                         n_blocks: Optional[int] = None,
+                         fsdp_serve: bool = False) -> BuiltStep:
+    """Decode-pool import of a KV handoff: splice one request's K/V states
+    into cache row ``slot`` on device.
+
+    (cache, k (L, 1, n_tokens, U, hd), v, slot) -> cache'.
+
+    The inbound states must already be in THIS pool's global slot layout
+    (``kv_cache.heads_to_slots`` re-expands the canonical bundle); the
+    splice itself is the shared ``seed_cache`` path, so dense targets take
+    a ``dynamic_update_slice`` and paged targets scatter through the
+    block table — the caller must have grown the slot's block list to
+    cover ``[0, n_tokens + 1)`` first (the +1 covers the first decode
+    write, same as admission).  ``n_tokens`` is static: one executable
+    per distinct handoff length, cached by the batcher.
+    """
+    del n_tokens  # static via the bundle's shape; named for the cache key
+    serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+
+    def splice(cache, k, v, slot):
+        return seed_cache(cache, {"k": k, "v": v}, slot=slot)
+
+    if mesh is None:
+        return BuiltStep(fn=splice, in_specs=None, out_specs=None,
+                         mesh=None, ctx=serve_ctx, donate_argnums=(0,))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, slots, s_max, local=False, block_size=block_size,
+        n_blocks=n_blocks))
+    cspecs = shd.cache_spec(cache_t, serve_ctx)
+    kv_spec = shd.kv_states_spec(serve_ctx)
+    in_specs = (cspecs, kv_spec, kv_spec, P())
+    fn = shard_map(splice, mesh=mesh, in_specs=in_specs, out_specs=cspecs,
+                   check_vma=False)
+    return BuiltStep(fn=fn, in_specs=in_specs, out_specs=cspecs, mesh=mesh,
+                     ctx=serve_ctx, donate_argnums=(0,))
+
+
 def build_admit_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                      prompt_len: int, slots: int = 1,
                      scan_layers: bool = True, fsdp_serve: bool = False,
@@ -759,4 +871,5 @@ def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
 
 __all__ = ["build_train_step", "build_decode_step", "build_prefill",
            "build_cache_init", "build_serve_step", "build_admit_step",
-           "build_admit_chunk_step", "build_spec_verify_step", "BuiltStep"]
+           "build_admit_chunk_step", "build_spec_verify_step",
+           "build_prefill_only_step", "build_kv_splice_step", "BuiltStep"]

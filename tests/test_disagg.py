@@ -1,0 +1,267 @@
+"""Disaggregated prefill/decode serving: KV handoff round-trips across
+layouts, coordinator correctness (bitwise parity vs colocated paged
+serving, incl. speculative decode on the decode pool), and queue behavior
+under decode-pool OOM/preemption."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.common import plan_gqa
+from repro.models.transformer import make_plan, init_params
+from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
+from repro.inference.engine import InferenceEngine
+from repro.inference.kv_cache import (KVBundle, export_slot, heads_to_slots,
+                                      slots_to_heads)
+from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), ap)
+    return cfg, ap, params
+
+
+def _trace(cfg, n=10, seed=4, mean_out=6, rate=3.0):
+    return make_trace(n, mean_in=10, mean_out=mean_out, rate=rate,
+                      vocab=cfg.vocab_size, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# KV bundle layout round-trips (host-side reshard machinery)
+# ---------------------------------------------------------------------------
+
+
+def test_bundle_roundtrip_across_tp_layouts():
+    """Canonical -> slot layout -> canonical is the identity for every TP
+    degree, including layouts that replicate kv heads across slots."""
+    rng = np.random.default_rng(0)
+    L, T, n_q, n_kv, hd = 2, 7, 4, 2, 16
+    canon = rng.standard_normal((L, T, n_kv, hd)).astype(np.float32)
+    for tp in (1, 2, 4):
+        plan = plan_gqa(n_q, n_kv, tp)
+        expanded = heads_to_slots(canon, plan.kv_map)
+        assert expanded.shape == (L, T, plan.kv_slots, hd)
+        # every slot owning head h carries exactly head h's values
+        for s, h in enumerate(plan.kv_map):
+            expect = canon[:, :, h] if h >= 0 else 0.0
+            np.testing.assert_array_equal(expanded[:, :, s], expect)
+        back = slots_to_heads(expanded, plan.kv_map)
+        np.testing.assert_array_equal(back, canon)
+    # cross-layout: pack from tp=4's layout, expand into tp=2's
+    p4, p2 = plan_gqa(n_q, n_kv, 4), plan_gqa(n_q, n_kv, 2)
+    via4 = slots_to_heads(heads_to_slots(canon, p4.kv_map), p4.kv_map)
+    np.testing.assert_array_equal(heads_to_slots(via4, p2.kv_map),
+                                  heads_to_slots(canon, p2.kv_map))
+
+
+def test_export_slot_dense_vs_paged_and_trash_isolation(tiny_lm):
+    """Exporting a slot from a dense cache and from a paged cache after
+    identical admissions yields identical bundles; freeing a neighbour
+    slot (whose table rows revert to the trash block) must not disturb
+    the export, and exporting a freed slot is rejected."""
+    cfg, ap, params = tiny_lm
+    prompt = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, 12).astype(np.int32)
+    other = np.random.default_rng(8).integers(
+        0, cfg.vocab_size, 20).astype(np.int32)
+    kv_map = ap.gqa.kv_map
+
+    def admit_two(**kw):
+        sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+        # admit directly (no decode steps): slot 0 = prompt, slot 1 = other
+        sched._wall0 = 0.0
+        assert sched._admit(0, Request(rid=0, prompt=prompt, max_new=4), 0.0)
+        assert sched._admit(1, Request(rid=1, prompt=other, max_new=4), 0.0)
+        return sched
+
+    dense = admit_two()
+    paged = admit_two(block_size=8)
+    b_dense = export_slot(dense.cache, 0, len(prompt), kv_map)
+    row = paged.alloc.table[0]
+    b_paged = export_slot(paged.cache, 0, len(prompt), kv_map,
+                          table_row=row)
+    assert b_dense.k.shape == (cfg.n_layers, len(prompt), cfg.n_kv_heads,
+                               cfg.head_dim)
+    np.testing.assert_array_equal(b_dense.k, b_paged.k)
+    np.testing.assert_array_equal(b_dense.v, b_paged.v)
+    # free the neighbour: slot 0's blocks and export must be untouched
+    paged.alloc.free(1)
+    b_after = export_slot(paged.cache, 0, len(prompt), kv_map,
+                          table_row=paged.alloc.table[0])
+    np.testing.assert_array_equal(b_paged.k, b_after.k)
+    # a freed slot's table row is all-trash: export refuses to read it
+    with pytest.raises(AssertionError):
+        export_slot(paged.cache, 1, len(other), kv_map,
+                    table_row=paged.alloc.table[1])
+
+
+def test_prefill_pool_full_vs_chunked_bundles(tiny_lm):
+    """The prefill-only step (full) and the chunked-admission export
+    produce identical bundles and first tokens, dense or paged pool."""
+    cfg, ap, params = tiny_lm
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, 23).astype(np.int32)
+    req = Request(rid=0, prompt=prompt, max_new=8)
+    full = PrefillPool(ap, params, s_max=96)
+    tok_f, b_f = full.prefill(req)
+    for kw in (dict(), dict(block_size=8)):
+        chunked = PrefillPool(ap, params, s_max=96, admit_mode="chunked",
+                              admit_chunk=16, **kw)
+        tok_c, b_c = chunked.prefill(req)
+        assert tok_f == tok_c
+        np.testing.assert_array_equal(b_f.k, b_c.k)
+        np.testing.assert_array_equal(b_f.v, b_c.v)
+    assert b_f.n_tokens == 23 and b_f.nbytes > 0
+
+
+# ---------------------------------------------------------------------------
+# coordinator: bitwise parity vs colocated serving
+# ---------------------------------------------------------------------------
+
+
+def _colocated(cfg, ap, params, reqs, **kw):
+    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+    return {r.rid: r.output for r in sched.run(reqs)}
+
+
+def _disagg(cfg, ap, params, reqs, *, pool_kw=None, decode_kw=None,
+            **coord_kw):
+    pool = PrefillPool(ap, params, s_max=96, **(pool_kw or {}))
+    tuner = pool_tuner(None)
+    decode = ContinuousBatcher(ap, params, slots=3, s_max=96,
+                               ar_table=tuner, **(decode_kw or {}))
+    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner, **coord_kw)
+    done = coord.run(reqs)
+    assert all(r.output is not None for r in done)
+    return {r.rid: r.output for r in done}, coord
+
+
+def test_disagg_trace_bitwise_equals_colocated(tiny_lm):
+    """Disaggregated greedy serve of the smoke trace == colocated paged
+    serve, request for request, for full and chunked prefill pools."""
+    cfg, ap, params = tiny_lm
+    ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8)
+    for pool_kw in (dict(),
+                    dict(admit_mode="chunked", admit_chunk=16,
+                         block_size=8)):
+        got, _ = _disagg(cfg, ap, params, _trace(cfg), pool_kw=pool_kw,
+                         decode_kw=dict(block_size=8))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+
+
+def test_disagg_spec_decode_parity(tiny_lm):
+    """Speculative decoding on the decode pool preserves the bitwise
+    greedy stream through the handoff."""
+    cfg, ap, params = tiny_lm
+    ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8)
+    reqs = _trace(cfg)
+    got, coord = _disagg(cfg, ap, params, reqs,
+                         decode_kw=dict(block_size=8, spec_mode="ngram",
+                                        spec_k=4))
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], got[rid])
+    m = coord.metrics(reqs)
+    assert m.completed == len(reqs)
+    assert m.decode_pool["spec_steps"] > 0
+    assert m.ttft_steps_p50 >= 1.0
+
+
+def test_disagg_dense_decode_pool(tiny_lm):
+    """block_size=0 (dense) decode pool takes the same handoff path."""
+    cfg, ap, params = tiny_lm
+    ref = _colocated(cfg, ap, params, _trace(cfg, n=6))
+    got, _ = _disagg(cfg, ap, params, _trace(cfg, n=6))
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], got[rid])
+
+
+# ---------------------------------------------------------------------------
+# coordinator: queue behavior under decode-pool OOM / preemption
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_decode_oom_reprefills_and_stays_exact(tiny_lm):
+    """A decode pool too small for three concurrent long decodes preempts;
+    the coordinator routes evicted contexts back through the prefill pool
+    (handoffs > requests) and the final tokens are undisturbed."""
+    cfg, ap, params = tiny_lm
+    rng = np.random.default_rng(5)
+    protos = [(rng.integers(0, cfg.vocab_size, 16).astype(np.int32), 40)
+              for _ in range(3)]
+    eng = InferenceEngine(ap, params, s_max=96)
+    ref = {i: eng.generate(p[None], n).new_tokens[0]
+           for i, (p, n) in enumerate(protos)}
+    reqs = [Request(rid=i, prompt=p, max_new=n, arrival_s=0.0)
+            for i, (p, n) in enumerate(protos)]
+    pool = PrefillPool(ap, params, s_max=96)
+    decode = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
+                               n_blocks=13)
+    coord = DisaggCoordinator(pool, decode)
+    done = coord.run(reqs)
+    m = coord.metrics(done)
+    assert m.preemptions > 0
+    assert m.handoffs > len(reqs), \
+        "preempted contexts must re-prefill (fresh handoff each time)"
+    assert m.peak_ready_depth >= 1   # bundles queued while the pool was full
+    for r in done:
+        np.testing.assert_array_equal(ref[r.rid], r.output)
+    decode.alloc.check()
+    assert decode.alloc.used_blocks == 0
+
+
+def test_admit_prefilled_rejects_when_pool_full(tiny_lm):
+    """admit_prefilled returns False (no state change) when the paged pool
+    cannot hold the bundle, and the bundle admits cleanly later."""
+    cfg, ap, params = tiny_lm
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, 24).astype(np.int32)
+    pool = PrefillPool(ap, params, s_max=96)
+    tok, bundle = pool.prefill(Request(rid=0, prompt=prompt, max_new=4))
+    # 13 blocks of 8 = 12 usable; slot 1 hogs 9, leaving 3 < the 4 needed
+    decode = ContinuousBatcher(ap, params, slots=2, s_max=96, block_size=8,
+                               n_blocks=13)
+    decode._wall0 = 0.0
+    assert decode.alloc.ensure(1, 72)
+    req = Request(rid=0, prompt=prompt, max_new=4)
+    assert not decode.admit_prefilled(0, req, bundle, tok, 0.0)
+    assert decode.active[0] is None and not decode.active_mask[0]
+    decode.alloc.free(1)
+    assert decode.admit_prefilled(0, req, bundle, tok, 0.0)
+    assert decode.positions[0] == len(prompt)
+    assert decode.outputs[0] == [tok]
+
+
+# ---------------------------------------------------------------------------
+# metrics: per-pool attribution + AR operating points
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_metrics_attribution_and_ar_buckets(tiny_lm):
+    cfg, ap, params = tiny_lm
+    reqs = _trace(cfg)
+    _, coord = _disagg(cfg, ap, params, reqs,
+                       decode_kw=dict(block_size=8))
+    m = coord.metrics(reqs)
+    assert m.completed == m.requests == len(reqs)
+    assert m.handoffs == len(reqs) and m.transfer_bytes > 0
+    # TTFT decomposes into prefill + transfer components
+    assert m.ttft_steps_p50 == pytest.approx(
+        m.prefill_steps_p50 + m.transfer_steps_p50, abs=2.0)
+    assert m.tpot_steps_p50 >= 0.9
+    # the disaggregation payoff: the pools key the AR table on different
+    # message-size buckets (prompt-sized vs token-sized messages)
+    assert m.prefill_ar_bucket > m.decode_ar_bucket
+    d = m.to_dict()
+    assert d["prefill_pool"]["prefills"] == len(reqs)
+    assert d["decode_pool"]["completed"] == len(reqs)
+
+
+def test_disagg_rejects_non_dense(tiny_lm):
+    cfg = get_smoke("rwkv6-7b")
+    ap = make_plan(cfg, 1)
+    with pytest.raises(ValueError):
+        PrefillPool(ap, None, s_max=96)

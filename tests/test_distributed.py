@@ -34,6 +34,12 @@ def test_spec_decode_parity(dist_runner):
 
 
 @pytest.mark.dist
+def test_disagg_mesh_parity(dist_runner):
+    out = dist_runner("case_disagg.py")
+    assert "disagg OK" in out
+
+
+@pytest.mark.dist
 def test_train_parity(dist_runner):
     out = dist_runner("case_train_parity.py")
     assert "train parity OK" in out

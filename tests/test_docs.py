@@ -1,0 +1,22 @@
+"""Docs-consistency checks run inside the tier-1 suite so documentation
+drift fails CI on every matrix leg (see tools/check_docs.py)."""
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_every_serve_flag_documented():
+    assert check_docs.main() == 0
+
+
+def test_readme_links_docs_suite():
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for doc in ("docs/serving.md", "docs/benchmarks.md",
+                "docs/paper_mapping.md"):
+        assert doc in readme, f"README must link {doc}"
+        assert os.path.exists(os.path.join(REPO, doc)), f"{doc} missing"

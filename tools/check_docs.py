@@ -1,0 +1,51 @@
+"""Docs-consistency gate: every ``launch/serve.py`` CLI flag must be
+documented in ``docs/serving.md``.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Introspects the live argparse parser (``repro.launch.serve.build_parser``)
+rather than grepping source, so aliases and flags added through helpers are
+covered too.  Run by CI (and by ``tests/test_docs.py`` inside the tier-1
+suite) so a new serve flag cannot land without its documentation.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVING_MD = os.path.join(REPO, "docs", "serving.md")
+
+
+def serve_flags():
+    """All option strings of the serve CLI (--help excluded)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch.serve import build_parser
+    flags = []
+    for action in build_parser()._actions:
+        for opt in action.option_strings:
+            if opt.startswith("--") and opt != "--help":
+                flags.append(opt)
+    return flags
+
+
+def main() -> int:
+    if not os.path.exists(SERVING_MD):
+        print(f"[check_docs] FAIL: {SERVING_MD} does not exist")
+        return 1
+    with open(SERVING_MD) as f:
+        doc = f.read()
+    missing = [fl for fl in serve_flags() if f"`{fl}" not in doc]
+    if missing:
+        print(f"[check_docs] FAIL: {len(missing)} serve flag(s) missing "
+              f"from docs/serving.md:")
+        for fl in missing:
+            print(f"  - {fl}")
+        return 1
+    print(f"[check_docs] OK: all {len(serve_flags())} serve flags "
+          f"documented in docs/serving.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
