@@ -13,6 +13,13 @@ Four evidence channels (no real interconnect in this container):
    simulated host devices, cross-checked against the autotuned dispatcher's
    per-bucket pick (chosen-vs-best regret), persisted to
    ``BENCH_allreduce.json`` so the perf trajectory is tracked across PRs.
+   The sweep also carries an **RS+AG column** (``sp_rows``): the
+   sequence-parallel decomposition of the same residual message — measured
+   pair latency, per-collective wire bytes from the lowered HLO (asserted
+   <= half the fused single-collective all-reduce's), and the
+   ``seq_parallel="auto"`` dispatcher's SP-vs-fused pick per size
+   (DESIGN.md §10: prefill-sized messages decompose, decode-sized stay on
+   the fused hierarchical-RD path).
 """
 from __future__ import annotations
 
@@ -97,8 +104,10 @@ def measured_sweep(out_path: str = "BENCH_allreduce.json"):
     import numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core.compat import make_mesh, shard_map
-    from repro.core import tp_all_reduce, ParallelCtx, autotune
+    from repro.core import (tp_all_reduce, tp_reduce_scatter, tp_all_gather,
+                            ParallelCtx, autotune)
     from repro.core import comm_model as cm
+    from repro.launch.hlo_analysis import collective_bytes
     from .common import timeit
 
     if len(jax.devices()) < 8:
@@ -107,9 +116,21 @@ def measured_sweep(out_path: str = "BENCH_allreduce.json"):
 
     mesh = make_mesh((2, 4), ("pod", "model"))
     fast_n, slow_n = 4, 2
+
+    def _shmap(fn):
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=P(),
+                                 out_specs=P(), check_vma=False))
+
+    def _per_coll_wire(f, x):
+        """Mean per-collective wire bytes of a lowered executable."""
+        st = collective_bytes(f.lower(x).as_text(dialect="hlo"), 8, 2)
+        assert st.count > 0, "no collectives in lowered module"
+        return (st.wire_ici_bytes + st.wire_dcn_bytes) / st.count, st.count
+
     tuner = autotune.AutoTuner(cm.TPU_V5E)
     grid = []
     picks = []
+    sp_rows = []
     for msg_bytes in SWEEP_SIZES:
         n_elems = msg_bytes // 4  # f32 payload
         x = np.random.default_rng(0).standard_normal(n_elems) \
@@ -150,6 +171,50 @@ def measured_sweep(out_path: str = "BENCH_allreduce.json"):
                       "regret": regret})
         emit(f"sweep/pick_{msg_bytes // KB}KB", measured[analytic],
              f"analytic={analytic};best={best};regret={regret:.3f}")
+
+        # -- RS+AG column: the sequence-parallel decomposition ------------
+        # Same residual message, issued as tp_reduce_scatter (ending the
+        # row-parallel projection) + deferred tp_all_gather.  Latency is
+        # measured with the shipped hier_rd slow phase; per-collective
+        # wire bytes are read from the lowered HLO against the fused
+        # single-collective (flat) all-reduce — the decomposition halves
+        # what each collective moves (DESIGN.md §10).
+        ctx_flat = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                               ar_strategy="flat")
+        ctx_rd = ctx_flat.replace(ar_strategy="hier_rd")
+        f_fused = _shmap(lambda v: tp_all_reduce(v, ctx_flat,
+                                                 scatter_dim=-1))
+        def sp_pair(v, ctx=ctx_rd):
+            return tp_all_gather(tp_reduce_scatter(v, ctx, dim=0), ctx,
+                                 dim=0)
+        f_sp = _shmap(sp_pair)
+        f_sp_flat = _shmap(lambda v: sp_pair(v, ctx_flat))
+        rs_ag_us = timeit(lambda: jax.block_until_ready(f_sp(x)),
+                          warmup=2, iters=5)
+        fused_pc, _ = _per_coll_wire(f_fused, x)
+        sp_pc, sp_n = _per_coll_wire(f_sp_flat, x)
+        auto_sp = tuner.choose_sp(msg_bytes, fast_n, slow_n, "float32")
+        sp_rows.append({
+            "msg_bytes": msg_bytes,
+            "rs_ag_us": rs_ag_us,
+            "fused_flat_us": measured["flat"],
+            "auto_sp": auto_sp,
+            "fused_pick": analytic,
+            "fused_per_coll_wire_bytes": fused_pc,
+            "rs_ag_per_coll_wire_bytes": sp_pc,
+            "rs_ag_collectives": sp_n,
+            "per_coll_ratio": sp_pc / fused_pc,
+        })
+        emit(f"sweep/rs_ag_{msg_bytes // KB}KB", rs_ag_us,
+             f"auto_sp={auto_sp};per_coll_ratio={sp_pc / fused_pc:.3f}")
+    # acceptance: each SP collective carries <= half the fused AR's wire
+    # bytes, and the dispatcher splits the regimes — SP at prefill-sized
+    # messages, fused hierarchical-RD at decode-sized ones.
+    assert all(r["per_coll_ratio"] <= 0.5 + 1e-6 for r in sp_rows), sp_rows
+    assert not sp_rows[0]["auto_sp"] and \
+        sp_rows[0]["fused_pick"] == "hier_rd", sp_rows[0]
+    assert all(r["auto_sp"] for r in sp_rows
+               if r["msg_bytes"] >= 1 * MB), sp_rows
     # refine: measured winners overwrite the analytic seeds
     tuner.refine()
     doc = {
@@ -162,6 +227,7 @@ def measured_sweep(out_path: str = "BENCH_allreduce.json"):
                  "payload), not real ICI/DCN wire time"),
         "grid": grid,
         "picks": picks,
+        "sp_rows": sp_rows,
         "tuned_table": tuner.to_json(),
     }
     with open(out_path, "w") as f:

@@ -108,9 +108,29 @@ def crossover_sweep(out_path: str = "BENCH_crossover.json"):
                 emit(f"crossover/H{d_model}_B{batch}_pods{slow}",
                      times[pick.strategy] * 1e6,
                      f"msg_kb={msg // 1024};pick={pick.strategy}")
+    # prefill-regime companion table: for prompt-sized residual messages,
+    # the modelled fused-AR vs RS+AG (sequence-parallel) times and the
+    # seq_parallel="auto" pick — decode rows above stay fused, these flip
+    # to SP once bandwidth dominates (DESIGN.md §10)
+    sp_rows = []
+    for d_model in (2048, 4096, 8192):
+        for prompt in (512, 2048, 8192):
+            msg = prompt * d_model * 2  # bf16
+            for slow in (2, 4):
+                t = autotune.predict_sp_times(msg, 16, slow, TPU_V5E)
+                sp = bool(t["rs_ag"] < t["fused"])
+                sp_rows.append({
+                    "d_model": d_model, "prompt_tokens": prompt,
+                    "msg_bytes": msg, "fast": 16, "slow": slow,
+                    "fused_us": t["fused"] * 1e6,
+                    "rs_ag_us": t["rs_ag"] * 1e6, "sp": sp,
+                })
+                emit(f"crossover/sp_H{d_model}_S{prompt}_pods{slow}",
+                     t["rs_ag"] * 1e6,
+                     f"fused_us={t['fused']*1e6:.1f};sp={sp}")
     with open(out_path, "w") as f:
-        json.dump({"network": "tpu_v5e", "rows": rows}, f, indent=2,
-                  sort_keys=True)
+        json.dump({"network": "tpu_v5e", "rows": rows,
+                   "sp_rows": sp_rows}, f, indent=2, sort_keys=True)
     emit("crossover/json_written", float(len(rows)), out_path)
     return rows
 

@@ -39,6 +39,37 @@ def _cell(ap, params, vocab, *, rate, slots, block_size, n_blocks=None,
     return row, m
 
 
+def _sp_operating_point(d_model: int = 4096, chunk: int = 4096,
+                        itemsize: int = 2, fast: int = 16, slow: int = 2):
+    """Sequence-parallel prefill operating point at a production-ish shape
+    (DESIGN.md §10): per-collective comm-bytes reduction of the RS+AG
+    decomposition vs the fused per-residual all-reduce, the activation
+    footprint between collectives (what actually caps the admit chunk),
+    and the autotuner's SP-vs-fused pick for that message."""
+    from repro.core import autotune
+    from repro.core.comm_model import TPU_V5E
+    msg = chunk * d_model * itemsize
+    g = fast
+    fused_wire = 2.0 * (g * slow - 1) / (g * slow) * msg  # one flat AR
+    sp_wire = (g - 1) / g * msg                           # RS or AG half
+    act_fused = chunk * d_model * itemsize                # replicated
+    act_sp = act_fused // g                               # sequence shard
+    return {
+        "d_model": d_model, "prefill_chunk_tokens": chunk,
+        "residual_msg_bytes": msg,
+        "fused_ar_wire_bytes_per_coll": fused_wire,
+        "sp_wire_bytes_per_coll": sp_wire,
+        "per_coll_bytes_reduction": fused_wire / sp_wire,
+        "activation_bytes_per_chunk_fused": act_fused,
+        "activation_bytes_per_chunk_sp": act_sp,
+        # at a fixed activation budget, sharded residuals admit a chunk
+        # `fast`x larger than the replicated layout
+        "max_admit_chunk_gain": g,
+        "auto_dispatch_sp": bool(
+            autotune.AutoTuner(TPU_V5E).choose_sp(msg, fast, slow)),
+    }
+
+
 def sweep(out_path: str = "BENCH_serve.json"):
     import jax
     from repro.configs import get_smoke
@@ -107,6 +138,7 @@ def sweep(out_path: str = "BENCH_serve.json"):
                                - paged["total_new_tokens"]) == 0,
         "dense_ttft_p50_steps": dense["ttft_steps_p50"],
         "paged_ttft_p50_steps": paged["ttft_steps_p50"],
+        "seq_parallel": _sp_operating_point(),
     }
     with open(out_path, "w") as f:
         json.dump({"arch": "llama3.2-1b(smoke)", "s_max": S_MAX,

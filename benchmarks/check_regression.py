@@ -16,7 +16,10 @@ What is compared (chosen to be meaningful on shared CI runners):
 * ``BENCH_allreduce.json`` — the dispatcher's chosen-vs-best **regret**,
   aggregated as the mean over size buckets.  Individual CPU collective
   timings are jittery, so only the aggregate is gated, with an absolute
-  slack floor on top of the relative threshold.
+  slack floor on top of the relative threshold.  The RS+AG ``sp_rows``
+  are additionally gated on their HLO-structural / analytic fields
+  (per-collective wire-byte ratio, collective count, SP-vs-fused
+  dispatch) which are deterministic on any runner.
 * ``BENCH_serve.json`` — the trace-replay **logical-step** metrics
   (TTFT/TPOT p50/p99 in steps, step counts, emitted tokens, peak KV
   footprint).  These are deterministic given the seeded trace, so any
@@ -48,6 +51,11 @@ SPEC_FIELDS = ("acceptance_rate", "accepted_tokens", "spec_steps", "steps",
 DISAGG_FIELDS = ("steps", "total_new_tokens", "completed", "preemptions",
                  "ttft_steps_p50", "tpot_steps_p50", "handoffs",
                  "transfer_bytes", "prefill_ar_bucket", "decode_ar_bucket")
+# RS+AG (sequence-parallel) rows of BENCH_allreduce.json: HLO-structural
+# and analytic fields only — deterministic on any runner.  Latency columns
+# (rs_ag_us / fused_flat_us) are deliberately ungated (CPU jitter).
+SP_FIELDS = ("per_coll_ratio", "auto_sp", "fused_per_coll_wire_bytes",
+             "rs_ag_per_coll_wire_bytes", "rs_ag_collectives")
 # Regret on CPU runners is noisy; gate the mean with extra absolute slack.
 REGRET_ABS_SLACK = 0.5
 
@@ -119,6 +127,14 @@ def check_allreduce(base: Dict, fresh: Dict, threshold: float,
         failures.append(
             f"allreduce mean regret: baseline {b:.3f} -> fresh {f:.3f} "
             f"(allowed <= {b * (1 + threshold) + REGRET_ABS_SLACK:.3f})")
+    # RS+AG (sequence-parallel) structural rows: deterministic per size
+    if base.get("sp_rows"):
+        if not fresh.get("sp_rows"):
+            failures.append("allreduce: fresh JSON lost 'sp_rows'")
+        else:
+            _check_rows(base["sp_rows"], fresh["sp_rows"],
+                        lambda r: r.get("msg_bytes"), SP_FIELDS,
+                        threshold, "allreduce.sp", failures)
 
 
 def main(argv=None) -> int:

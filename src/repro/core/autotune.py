@@ -113,6 +113,35 @@ def _rd_chunks_for(msg_bytes: float, fast_size: int) -> int:
                    max(1, shard // _CHUNK_THRESHOLD_BYTES)))
 
 
+def predict_sp_times(msg_bytes: float, fast_size: int, slow_size: int,
+                     net: cm.NetworkSpec) -> Dict[str, float]:
+    """Fused-AR vs RS+AG (sequence-parallel) predicted seconds.
+
+    ``fused`` is the best dispatchable all-reduce strategy at this size
+    (what ``ar_strategy="auto"`` would run for the residual); ``rs_ag`` is
+    the Megatron-SP decomposition — reduce-scatter ending the row-parallel
+    projection, all-gather deferred to the next column-parallel input —
+    modelled by :func:`repro.core.comm_model.t_sp_rs_ag`.
+    """
+    fused = min(predict_times(msg_bytes, fast_size, slow_size, net)
+                .values())
+    return {"fused": fused,
+            "rs_ag": cm.t_sp_rs_ag(msg_bytes, max(1, slow_size),
+                                   max(1, fast_size), net)}
+
+
+def analytic_sp_choice(msg_bytes: float, fast_size: int, slow_size: int,
+                       net: cm.NetworkSpec) -> bool:
+    """True when the RS+AG decomposition beats the best fused all-reduce
+    under the alpha-beta model — large (bandwidth-bound) prefill messages;
+    False in the latency-bound one-token decode regime, where the extra
+    collective launch is pure overhead."""
+    if fast_size <= 1:
+        return False
+    t = predict_sp_times(msg_bytes, fast_size, slow_size, net)
+    return t["rs_ag"] < t["fused"]
+
+
 def analytic_choice(msg_bytes: float, fast_size: int, slow_size: int,
                     net: cm.NetworkSpec, *,
                     allow_lossy: bool = False) -> ARChoice:
@@ -163,10 +192,17 @@ def _key(msg_bytes: int, fast_size: int, slow_size: int,
     return f"b{_bucket(msg_bytes)}/f{fast_size}/s{slow_size}/{dtype}"
 
 
-def _parse_key(key: str) -> Tuple[int, int, int]:
-    """(bucket msg_bytes, fast_size, slow_size) back out of a table key."""
-    b, f, s, _ = key.split("/")
-    return 2 ** int(b[1:]), int(f[1:]), int(s[1:])
+def _parse_key(key: str) -> Tuple[int, int, int, str]:
+    """(bucket_bytes, fast_size, slow_size, dtype) back out of a table key.
+
+    ``bucket_bytes`` is the bucket's representative size — the power-of-two
+    upper bound ``2**b`` the key was bucketed to, NOT the original message
+    size (which is lost to bucketing; every consumer must treat it as the
+    bucket bound).  Round-trip invariant:
+    ``_key(*_parse_key(k)) == k`` for every well-formed key ``k``.
+    """
+    b, f, s, dtype = key.split("/")
+    return 2 ** int(b[1:]), int(f[1:]), int(s[1:]), dtype
 
 
 @dataclasses.dataclass
@@ -194,6 +230,11 @@ class AutoTuner:
         # that owns a tuner instance (e.g. one serving pool) prove which
         # message-size buckets its workload actually keyed the table on.
         self.lookups: Dict[str, int] = {}
+        # sequence-parallel dispatch: key -> use RS+AG instead of the
+        # fused all-reduce for that residual message size (PR 5 tentpole;
+        # consulted by ``seq_parallel="auto"`` call sites at trace time).
+        self.sp_table: Dict[str, bool] = {}
+        self.sp_lookups: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     # -- lookup ------------------------------------------------------------
@@ -211,11 +252,34 @@ class AutoTuner:
             self.table[key] = choice
             return choice
 
+    def choose_sp(self, msg_bytes: int, fast_size: int, slow_size: int,
+                  dtype: str = "bfloat16") -> bool:
+        """Per-call-site sequence-parallel dispatch: True routes the
+        residual through the RS+AG decomposition, False keeps the fused
+        all-reduce.  Seeded analytically (:func:`analytic_sp_choice`);
+        persisted entries override."""
+        key = _key(msg_bytes, fast_size, slow_size, dtype)
+        with self._lock:
+            self.sp_lookups[key] = self.sp_lookups.get(key, 0) + 1
+            hit = self.sp_table.get(key)
+            if hit is None:
+                hit = analytic_sp_choice(msg_bytes, fast_size, slow_size,
+                                         self.net)
+                self.sp_table[key] = hit
+            return hit
+
     def lookup_buckets(self) -> List[int]:
         """Sorted message-size bucket exponents this tuner has dispatched
         on (one entry per distinct table key seen by :meth:`choose`)."""
         with self._lock:
             return sorted({int(k.split("/")[0][1:]) for k in self.lookups})
+
+    def sp_lookup_buckets(self) -> List[int]:
+        """Bucket exponents the SP dispatcher was consulted on (one entry
+        per distinct key seen by :meth:`choose_sp`)."""
+        with self._lock:
+            return sorted({int(k.split("/")[0][1:])
+                           for k in self.sp_lookups})
 
     # -- measurement refinement -------------------------------------------
 
@@ -236,12 +300,14 @@ class AutoTuner:
                 prev = self.table.get(key)
                 rd_chunks = 1
                 if best.strategy == "hier_rd":
-                    # Recompute from the bucket, not from the previous
-                    # entry: the analytic seed only sets chunks when it
-                    # itself picked hier_rd.
-                    msg, fast, slow = _parse_key(key)
+                    # Recompute from the bucket bound, not from the
+                    # previous entry: the analytic seed only sets chunks
+                    # when it itself picked hier_rd.  (The original
+                    # message size is gone — the bucket bound is the only
+                    # coherent size to chunk on, same as ``choose``.)
+                    bucket_bytes, fast, slow, _ = _parse_key(key)
                     if slow > 1:
-                        rd_chunks = _rd_chunks_for(msg, fast)
+                        rd_chunks = _rd_chunks_for(bucket_bytes, fast)
                 new = ARChoice(strategy=best.strategy, rd_chunks=rd_chunks,
                                compress_slow=prev.compress_slow
                                if prev else False)
@@ -258,6 +324,7 @@ class AutoTuner:
             "allow_lossy": self.allow_lossy,
             "table": {k: dataclasses.asdict(v)
                       for k, v in sorted(self.table.items())},
+            "sp_table": dict(sorted(self.sp_table.items())),
         }
 
     def save(self, path: str) -> None:
@@ -275,6 +342,8 @@ class AutoTuner:
         t = cls(net, allow_lossy=bool(doc.get("allow_lossy", False)))
         for k, v in doc.get("table", {}).items():
             t.table[k] = ARChoice(**v)
+        for k, v in doc.get("sp_table", {}).items():
+            t.sp_table[k] = bool(v)
         return t
 
 
@@ -346,8 +415,17 @@ def resolve(ctx, msg_bytes: int, fast_size: int, slow_size: int,
     return choice.apply(ctx)
 
 
+def resolve_sp(msg_bytes: int, fast_size: int, slow_size: int,
+               dtype: str) -> bool:
+    """Concretize ``seq_parallel="auto"`` for one prefill call site against
+    the active tuner (trace-time, like :func:`resolve`)."""
+    return _ACTIVE.choose_sp(int(msg_bytes), fast_size, slow_size,
+                             str(dtype))
+
+
 __all__ = [
     "ARChoice", "AutoTuner", "predict_times", "analytic_choice",
+    "predict_sp_times", "analytic_sp_choice",
     "active", "install", "install_from_path", "tuner_for", "using",
-    "resolve", "bucket_of", "DISPATCHABLE",
+    "resolve", "resolve_sp", "bucket_of", "DISPATCHABLE",
 ]

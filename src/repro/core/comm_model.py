@@ -175,6 +175,45 @@ def t_rd_halving_inter(msg_bytes: float, n_nodes: int, gpus_per_node: int,
         2.0 * (n_nodes - 1) / n_nodes * (eta * msg_bytes / (gpus_per_node * net.beta_inter))
 
 
+def t_sp_rs_ag(msg_bytes: float, n_nodes: int, gpus_per_node: int,
+               net: NetworkSpec, overlap: float = 0.5) -> float:
+    """Sequence-parallel RS + AG pair replacing one fused TP all-reduce.
+
+    The Megatron-SP / Flash-Communication decomposition (arXiv 2412.04964):
+    the row-parallel projection ends in a reduce-scatter on the sequence
+    dim and the all-gather is deferred to the next column-parallel input,
+    so each collective moves half the fused all-reduce's wire bytes and
+    the norm / residual between them runs on the 1/G sequence shard.
+
+    Cost shape: RS_intra + best inter phase on the scattered shard +
+    AG_intra, where a fraction ``overlap`` of the AG's *bandwidth* term is
+    hidden behind the adjacent column-parallel GEMM (the AG has no data
+    dependence on that GEMM's weight operand, so the latency-hiding
+    scheduler can pipeline them — the deferred-gather claim of Flash
+    Communication).  The extra collective launch costs one more
+    ``alpha_intra`` latency chain, which is why one-token decode messages
+    stay on the fused path: there the alpha term dominates and the
+    overlappable bandwidth term is negligible.
+    """
+    g, n = max(1, gpus_per_node), max(1, n_nodes)
+    if g <= 1 and n <= 1:
+        return 0.0
+    rs = t_reduce_scatter_intra(msg_bytes, g, net)
+    ag = t_allgather_intra(msg_bytes, g, net)
+    inter = 0.0
+    if n > 1:
+        # the slow phase inherits whichever inter algorithm is cheapest at
+        # this shard size (mirrors tp_reduce_scatter's strategy dispatch)
+        shard = msg_bytes / g
+        ring = 2.0 * (n - 1) * net.alpha_inter \
+            + 2.0 * (n - 1) / n * (shard / net.beta_inter)
+        inter = min(t_rd_inter_full_exchange(msg_bytes, n, g, net),
+                    t_rd_halving_inter(msg_bytes, n, g, net), ring)
+    ag_alpha = (g - 1) * net.alpha_intra
+    ag_bw = max(ag - ag_alpha, 0.0)
+    return rs + inter + ag_alpha + (1.0 - overlap) * ag_bw + net.alpha_intra
+
+
 def t_nvrar_variant(msg_bytes: float, n_nodes: int, gpus_per_node: int,
                     net: NetworkSpec, inter: str = "paper",
                     eta: float = 1.0) -> float:
@@ -242,6 +281,6 @@ __all__ = [
     "NetworkSpec", "PERLMUTTER", "VISTA", "TPU_V5E", "NETWORKS",
     "t_ring_allreduce", "t_tree_allreduce", "t_reduce_scatter_intra",
     "t_allgather_intra", "t_rd_inter", "t_nvrar", "t_rd_inter_full_exchange",
-    "t_rd_halving_inter", "t_nvrar_variant", "nccl_model_best",
+    "t_rd_halving_inter", "t_sp_rs_ag", "t_nvrar_variant", "nccl_model_best",
     "nvrar_speedup", "speedup_table", "decode_allreduce_bytes",
 ]

@@ -323,7 +323,15 @@ def tp_reduce_scatter(x: jax.Array, ctx: ParallelCtx,
                       dim: int) -> jax.Array:
     """Sequence-parallel form: reduce TP partials, leave result sharded on
     ``dim`` over the fast axes (Megatron-SP).  Slow-axis phase still runs in
-    full so the result is correct across pods."""
+    full so the result is correct across pods.
+
+    Slow-phase strategy selection mirrors :func:`tp_all_reduce`: ``flat``
+    hands the cross-pod sum to XLA (``lax.psum``), every hierarchical
+    strategy runs its own inter phase via ``_slow_phase`` (ring / recursive
+    doubling / halving).  (PR 5 bugfix: this used to bury the flat case in
+    a conditional that could never fire, so ``hier_ring`` bypassed
+    ``_slow_phase`` and ``flat`` was selected by dead code.)
+    """
     fast, slow = ctx.tp_fast, ctx.tp_slow
     if not fast and not slow:
         return x
@@ -332,11 +340,10 @@ def tp_reduce_scatter(x: jax.Array, ctx: ParallelCtx,
     if fast:
         x = lax.psum_scatter(x, fast, scatter_dimension=dim, tiled=True)
     if slow:
-        if ctx.ar_strategy in ("hier_rd", "hier_rd_halving"):
-            x = _slow_phase(x, slow, ctx.replace(ar_strategy="hier_rd")
-                            if ctx.ar_strategy == "flat" else ctx)
-        else:
+        if ctx.ar_strategy == "flat":
             x = lax.psum(x, slow)
+        else:
+            x = _slow_phase(x, slow, ctx)
     return x
 
 

@@ -29,6 +29,8 @@ AxisNames = Tuple[str, ...]
 
 AR_STRATEGIES = ("flat", "hier_ring", "hier_rd", "hier_rd_halving", "auto")
 
+SEQ_PARALLEL_MODES = ("off", "on", "auto")
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:
@@ -64,10 +66,24 @@ class ParallelCtx:
     # Output-feature chunk count for the overlapped path (1 disables
     # chunking even when overlap_matmul is set).
     overlap_chunks: int = 4
+    # Sequence-parallel prefill (Megatron-SP residual layout): the residual
+    # stream stays sequence-sharded over tp_fast between sublayers — the
+    # row-parallel projections (attention wo / MLP down) end in
+    # tp_reduce_scatter on the sequence dim, norms run on sequence shards,
+    # and tp_all_gather restores full sequence only where QKV / up-proj
+    # need it.  "off" keeps the fused per-residual all-reduce, "on" forces
+    # the RS+AG decomposition wherever the sequence divides tp_fast, and
+    # "auto" dispatches per call site on message size via the autotuner's
+    # SP table (decode steps never decompose — their one-token messages
+    # live in the latency-bound regime; see DESIGN.md §10).
+    seq_parallel: str = "off"
 
     def __post_init__(self):
         if self.ar_strategy not in AR_STRATEGIES:
             raise ValueError(f"unknown ar_strategy {self.ar_strategy!r}")
+        if self.seq_parallel not in SEQ_PARALLEL_MODES:
+            raise ValueError(
+                f"unknown seq_parallel mode {self.seq_parallel!r}")
 
     # -- derived -----------------------------------------------------------
     @property
@@ -115,4 +131,4 @@ def multi_pod_ctx(ar_strategy: str = "flat", cross_pod_tp: bool = False,
 
 
 __all__ = ["ParallelCtx", "LOCAL", "single_pod_ctx", "multi_pod_ctx",
-           "AR_STRATEGIES"]
+           "AR_STRATEGIES", "SEQ_PARALLEL_MODES"]

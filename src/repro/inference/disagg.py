@@ -30,7 +30,10 @@ benchmarks/bench_disagg.py): a disaggregated greedy trace is **bitwise
 equal** to the colocated paged serve of the same trace, including with
 speculative decoding enabled on the decode pool — a slot's greedy tokens
 depend only on its own prompt and KV, and the handoff round-trips KV
-without dtype conversion.
+without dtype conversion.  Sampled (temperature > 0) plain-decode traces
+are **token-identical** too: every request samples from its own stateless
+key chain (``scheduler.request_sampling_key``), whose base key travels
+with the context in ``KVBundle.rng`` (PR 5 closed the per-pool-RNG gap).
 
 Scheduling model: the coordinator shares the batcher's logical step clock
 (1.0 per tick).  Each tick the prefill pool processes up to
@@ -41,10 +44,11 @@ decode pool (DESIGN.md §9).
 
 Known gaps: dense (attention-only) families only — recurrent state
 handoff is not implemented (same restriction as chunked prefill / spec
-decode); sampled (temperature > 0) streams are deterministic per seed but
-not bit-identical to colocated serving (the two deployments consume their
-RNG streams in different orders); the handoff moves bundles through host
-memory (one device round-trip), standing in for a NIC/ICI transport.
+decode); *speculative* sampled streams still draw their accept/resample
+randomness from the step-level rng, so spec + temperature > 0 is
+seed-deterministic but not colocated-identical (plain sampled decode is);
+the handoff moves bundles through host memory (one device round-trip),
+standing in for a NIC/ICI transport.
 """
 from __future__ import annotations
 
@@ -63,7 +67,7 @@ from ..parallel.steps import (build_admit_chunk_step, build_cache_init,
                               build_prefill_only_step)
 from .kv_cache import KVBundle, export_slot, slots_to_heads
 from .scheduler import (ContinuousBatcher, Request, _percentile,
-                        run_chunked_prefill)
+                        request_sampling_key, run_chunked_prefill)
 
 
 def pool_tuner(ar_table) -> autotune.AutoTuner:
@@ -118,6 +122,7 @@ class PrefillPool:
         self.admit_chunk = admit_chunk
         self.block_size = block_size
         self.tuner = pool_tuner(ar_table)
+        self.seed = seed
         self._rng = jax.random.PRNGKey(seed)
         self._step_kw = dict(scan_layers=scan_layers,
                              fsdp_serve=fsdp_serve,
@@ -148,12 +153,6 @@ class PrefillPool:
         self.wall_s = 0.0
         self.analytic_buckets: set = set()
 
-    def _step_rng(self):
-        if self.temperature > 0.0:
-            self._rng, r = jax.random.split(self._rng)
-            return r
-        return self._rng
-
     def _full_fn(self, prompt_len: int):
         fn = self._full_fns.get(prompt_len)
         if fn is None:
@@ -171,19 +170,23 @@ class PrefillPool:
                              f"{self.s_max}")
         t0 = time.perf_counter()
         kv_map = self.ap.gqa.kv_map
+        # the request's sampling chain: first token is fold_in(base, 0);
+        # the base key rides the bundle so the decode pool continues the
+        # exact chain (sampled disagg == colocated, token for token)
+        base = request_sampling_key(self.seed, req.rid)
+        first = jax.random.fold_in(base, 0)
         if self.admit_mode == "full":
             tok, k, v = self._full_fn(S)(
-                self.params, jnp.asarray(req.prompt[None]),
-                self._step_rng())
+                self.params, jnp.asarray(req.prompt[None]), first)
             bundle = KVBundle(k=slots_to_heads(np.asarray(k)[:, 0], kv_map),
                               v=slots_to_heads(np.asarray(v)[:, 0], kv_map))
         else:
             tok, self.cache = run_chunked_prefill(
                 self.params, self.cache, req.prompt, 0, self.admit_chunk,
-                self._chunk_mid, self._chunk_final, self._rng,
-                self._step_rng())
+                self._chunk_mid, self._chunk_final, self._rng, first)
             row = self._table_row[:] if self.block_size > 0 else None
             bundle = export_slot(self.cache, 0, S, kv_map, table_row=row)
+        bundle.rng = np.asarray(base, np.uint32)
         self.prefills += 1
         self.prompt_tokens += S
         self.wall_s += time.perf_counter() - t0

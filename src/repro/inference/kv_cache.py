@@ -308,9 +308,18 @@ class KVBundle:
     pool's TP degree, block size, or slot index, so either pool can use
     any mesh layout.  Dtype is the cache dtype (no conversion — bitwise
     round-trips).
+
+    ``rng``: the request's per-slot sampling-chain base key ((2,) uint32;
+    token ``t`` is drawn with ``fold_in(rng, t)`` — see
+    ``scheduler.request_sampling_key``).  Carrying it through the handoff
+    is what makes sampled (temperature > 0) disaggregated streams
+    token-identical to colocated serving: the decode pool continues the
+    exact chain the prefill pool sampled the first token from.  ``None``
+    for producers that never sample (e.g. raw :func:`export_slot`).
     """
     k: np.ndarray
     v: np.ndarray
+    rng: Optional[np.ndarray] = None
 
     def __post_init__(self):
         assert self.k.shape == self.v.shape and self.k.ndim == 4, \
@@ -322,7 +331,8 @@ class KVBundle:
 
     @property
     def nbytes(self) -> int:
-        """Transfer size of the handoff payload."""
+        """Transfer size of the handoff payload (K/V only; the 8-byte
+        sampling key rides in the control plane)."""
         return int(self.k.nbytes + self.v.nbytes)
 
 

@@ -89,6 +89,19 @@ def _percentile(xs, q):
         else float("nan")
 
 
+def request_sampling_key(seed: int, rid: int) -> jax.Array:
+    """Base of request ``rid``'s per-slot sampling chain.
+
+    Token ``t`` of the request is drawn with ``fold_in(base, t)`` — a
+    *stateless* chain keyed on the request, not on the global step
+    schedule.  Consequences the suite relies on: sampled streams are
+    identical across colocated and disaggregated deployments (the base key
+    travels in ``KVBundle.rng``), and a preempted request's recompute
+    resamples its original tokens.  temperature=0 paths never consult it.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+
+
 def run_chunked_prefill(params, cache, prompt: np.ndarray, slot, chunk: int,
                         mid_fn, final_fn, mid_rng, final_rng):
     """Drive a prompt through the chunked-prefill executables into cache
@@ -208,6 +221,7 @@ class ContinuousBatcher:
         self.mesh = mesh
         self.temperature = temperature
         self.top_k = top_k
+        self.seed = seed
         self._rng = jax.random.PRNGKey(seed)
         if admit_mode not in ("full", "chunked"):
             raise ValueError(f"unknown admit_mode {admit_mode!r}")
@@ -288,6 +302,10 @@ class ContinuousBatcher:
         self.remaining = np.zeros((slots,), np.int32)
         self.tokens = np.zeros((slots,), np.int32)
         self.active_mask = np.zeros((slots,), bool)
+        # per-slot sampling chain: base key + tokens sampled so far (slot
+        # s's next token draws with fold_in(slot_key[s], sample_idx[s]))
+        self.slot_key = np.zeros((slots, 2), np.uint32)
+        self.sample_idx = np.zeros((slots,), np.int32)
         self._admit_seq = np.full((slots,), -1, np.int64)  # admission order
         self._seq = 0
         self.active: List[Optional[Request]] = [None] * slots
@@ -307,7 +325,9 @@ class ContinuousBatcher:
         self._state = {"tokens": jnp.asarray(self.tokens),
                        "positions": jnp.asarray(self.positions),
                        "remaining": jnp.asarray(self.remaining),
-                       "active": jnp.asarray(self.active_mask)}
+                       "active": jnp.asarray(self.active_mask),
+                       "rng": jnp.asarray(self.slot_key),
+                       "sample_idx": jnp.asarray(self.sample_idx)}
         self._dirty = False
 
     def _sync_table(self):
@@ -343,23 +363,32 @@ class ContinuousBatcher:
             if not self.alloc.ensure(slot, S + 1):
                 return False
             self._sync_table()
+        base = request_sampling_key(self.seed, req.rid)
+        first = jax.random.fold_in(base, 0)   # token 0 of the chain
         if self.admit_mode == "chunked":
             tok, self.cache = run_chunked_prefill(
                 self.params, self.cache, req.prompt, slot,
                 self.admit_chunk, self._admit_chunked_mid,
-                self._admit_chunked, self._rng, self._step_rng())
+                self._admit_chunked, self._rng, first)
         else:
             tok, self.cache = self._admit_fn(S)(
                 self.params, self.cache, jnp.asarray(req.prompt[None]),
-                jnp.int32(slot), self._step_rng())
-        self._activate(slot, req, int(np.asarray(tok)[0]), S, now)
+                jnp.int32(slot), first)
+        self._activate(slot, req, int(np.asarray(tok)[0]), S, now,
+                       rng_key=base)
         return True
 
     def _activate(self, slot: int, req: Request, nxt: int, S: int,
-                  now: float) -> None:
+                  now: float, rng_key=None) -> None:
         """Post-admission bookkeeping shared by local prefill admission and
         disaggregated handoff admission: the slot holds ``req`` at position
-        ``S`` with first token ``nxt`` already emitted."""
+        ``S`` with first token ``nxt`` already emitted (sampled as token 0
+        of the request's chain).  ``rng_key`` is that chain's base key —
+        a handoff passes the bundle's; None recomputes from (seed, rid)."""
+        if rng_key is None:
+            rng_key = request_sampling_key(self.seed, req.rid)
+        self.slot_key[slot] = np.asarray(rng_key, np.uint32)
+        self.sample_idx[slot] = 1
         self.active[slot] = req
         self.positions[slot] = S
         self.remaining[slot] = req.max_new - 1
@@ -407,7 +436,10 @@ class ContinuousBatcher:
         v = heads_to_slots(bundle.v, self.ap.gqa.kv_map)[:, None]
         self.cache = self._splice_fn(S)(
             self.cache, jnp.asarray(k), jnp.asarray(v), jnp.int32(slot))
-        self._activate(slot, req, int(first_token), S, now)
+        # continue the *prefill pool's* sampling chain (bundle.rng); a
+        # greedy-only producer leaves it None and _activate recomputes
+        self._activate(slot, req, int(first_token), S, now,
+                       rng_key=bundle.rng)
         return True
 
     def _release(self, slot: int, now: float):
@@ -418,6 +450,7 @@ class ContinuousBatcher:
         self.active[slot] = None
         self.active_mask[slot] = False
         self.remaining[slot] = 0
+        self.sample_idx[slot] = 0
         self._admit_seq[slot] = -1
         if self.alloc is not None:
             self.alloc.free(slot)
@@ -509,8 +542,12 @@ class ContinuousBatcher:
         if self._dirty:
             self._push_state()
         was_active = self.active_mask.copy()
+        # the verify step keeps the lean 4-field state (its sampled mode
+        # draws from the step-level rng, not the per-slot chains)
+        spec_state = {k2: self._state[k2] for k2 in
+                      ("tokens", "positions", "remaining", "active")}
         emitted, accepted, self.cache = self._spec_fn(k)(
-            self.params, self.cache, self._state, jnp.asarray(drafts),
+            self.params, self.cache, spec_state, jnp.asarray(drafts),
             self._step_rng())
         emitted = np.asarray(emitted)
         accepted = np.asarray(accepted)
@@ -575,7 +612,7 @@ class ContinuousBatcher:
             self._push_state()
         was_active = self.active_mask.copy()
         emitted, done, self._state, self.cache = self._serve(
-            self.params, self.cache, self._state, self._step_rng())
+            self.params, self.cache, self._state)
         emitted = np.asarray(emitted)
         done = np.asarray(done)
         self.steps_run += 1
@@ -586,6 +623,7 @@ class ContinuousBatcher:
             self.tokens[s] = emitted[s]
             self.positions[s] += 1
             self.remaining[s] -= 1
+            self.sample_idx[s] += 1
             if self.alloc is not None:
                 self.alloc.note_usage(s, int(self.positions[s]))
             if done[s]:
@@ -729,4 +767,4 @@ def make_trace(n_requests: int, *, mean_in: int, mean_out: int,
 
 
 __all__ = ["ContinuousBatcher", "Request", "ServeMetrics", "make_trace",
-           "run_chunked_prefill"]
+           "run_chunked_prefill", "request_sampling_key"]

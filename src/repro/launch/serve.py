@@ -38,15 +38,18 @@ import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke, ARCH_IDS
-from ..core.pcontext import ParallelCtx, LOCAL, AR_STRATEGIES
+from ..core.pcontext import (ParallelCtx, LOCAL, AR_STRATEGIES,
+                             SEQ_PARALLEL_MODES)
 from ..models.transformer import make_plan, init_params
 from ..inference.engine import InferenceEngine
 from ..inference.scheduler import ContinuousBatcher, make_trace
 
 
-def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool):
+def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool,
+                  seq_parallel: str = "off"):
     """(mesh, ctx, tp_total) for the requested layout; local when tp == 1."""
-    ctx = LOCAL.replace(ar_strategy=ar_strategy, overlap_matmul=overlap)
+    ctx = LOCAL.replace(ar_strategy=ar_strategy, overlap_matmul=overlap,
+                        seq_parallel=seq_parallel)
     if tp <= 1:
         return None, ctx, 1
     from ..core.compat import AxisType, make_mesh
@@ -66,6 +69,7 @@ def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool):
 def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
               prompt_len: int = 16, max_new: int = 16,
               ar_strategy: str = "flat", ar_table=None, overlap: bool = False,
+              seq_parallel: str = "off",
               temperature: float = 0.0, top_k: int = 0, seed: int = 0,
               tp: int = 1, pods: int = 1, block_size: int = 0,
               spec_mode=None, spec_k: int = 4,
@@ -74,7 +78,8 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
     if block_size and tp > 1:
         raise SystemExit("--block-size with --mode batch is local-path "
                          "only (use --mode trace for mesh-path paging)")
-    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap)
+    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
+                                  seq_parallel)
     ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
     s_max = prompt_len + max_new + 8
@@ -110,7 +115,8 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
 def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
               slots: int = 4, s_max: int = 128, block_size: int = 0,
               n_blocks=None, ar_strategy: str = "flat", ar_table=None,
-              overlap: bool = False, temperature: float = 0.0,
+              overlap: bool = False, seq_parallel: str = "off",
+              temperature: float = 0.0,
               top_k: int = 0, seed: int = 0, tp: int = 1, pods: int = 1,
               admit_mode: str = "full", admit_chunk: int = 32,
               mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
@@ -119,7 +125,8 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
-    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap)
+    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
+                                  seq_parallel)
     ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
     sched = ContinuousBatcher(
@@ -167,7 +174,7 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
 def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
                slots: int = 4, s_max: int = 128, block_size: int = 0,
                n_blocks=None, ar_strategy: str = "flat", ar_table=None,
-               overlap: bool = False,
+               overlap: bool = False, seq_parallel: str = "off",
                prefill_tp: int = 1, prefill_pods: int = 1,
                decode_tp: int = 1, decode_pods: int = 1,
                prefill_ar_table=None, decode_ar_table=None,
@@ -185,10 +192,13 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
     prefill_ar_table = prefill_ar_table or ar_table
     decode_ar_table = decode_ar_table or ar_table
     cfg = get_smoke(arch) if smoke else get_config(arch)
+    # seq_parallel shapes the *prefill* pool's residual layout only; the
+    # decode pool stays on the fused path (its one-token and spec-verify
+    # messages live in the latency-bound regime — DESIGN.md §10)
     mesh_p, ctx_p, tp_p = _mesh_and_ctx(prefill_tp, prefill_pods,
-                                        ar_strategy, overlap)
+                                        ar_strategy, overlap, seq_parallel)
     mesh_d, ctx_d, tp_d = _mesh_and_ctx(decode_tp, decode_pods,
-                                        ar_strategy, overlap)
+                                        ar_strategy, overlap, "off")
     # per-pool plans + params: same weights (same key), each pool's layout
     ap_p = make_plan(cfg, tp_p)
     ap_d = make_plan(cfg, tp_d)
@@ -266,6 +276,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="persisted autotune table for --ar-strategy auto")
     p.add_argument("--overlap", action="store_true",
                    help="overlapped collective-matmul decode path")
+    p.add_argument("--seq-parallel", choices=list(SEQ_PARALLEL_MODES),
+                   default="off",
+                   help="sequence-parallel prefill residual layout: "
+                        "reduce-scatter + all-gather replace the fused "
+                        "per-residual all-reduce (auto = per-call-site "
+                        "message-size dispatch; decode is never "
+                        "decomposed)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--seed", type=int, default=0)
@@ -322,7 +339,7 @@ def main(argv=None):
                    slots=args.slots, s_max=args.s_max,
                    block_size=args.block_size, n_blocks=args.n_blocks,
                    ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                   overlap=args.overlap,
+                   overlap=args.overlap, seq_parallel=args.seq_parallel,
                    prefill_tp=args.prefill_tp,
                    prefill_pods=args.prefill_pods,
                    decode_tp=args.decode_tp, decode_pods=args.decode_pods,
@@ -340,7 +357,8 @@ def main(argv=None):
         run_batch(args.arch, smoke=args.smoke, batch=args.batch,
                   prompt_len=args.prompt_len, max_new=args.max_new,
                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                  overlap=args.overlap, temperature=args.temperature,
+                  overlap=args.overlap, seq_parallel=args.seq_parallel,
+                  temperature=args.temperature,
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
                   pods=args.pods, block_size=args.block_size,
                   spec_mode=spec_mode, spec_k=args.spec_k,
@@ -350,7 +368,8 @@ def main(argv=None):
                   slots=args.slots, s_max=args.s_max,
                   block_size=args.block_size, n_blocks=args.n_blocks,
                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                  overlap=args.overlap, temperature=args.temperature,
+                  overlap=args.overlap, seq_parallel=args.seq_parallel,
+                  temperature=args.temperature,
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
                   pods=args.pods, admit_mode=args.admit_mode,
                   admit_chunk=args.admit_chunk, rate=args.rate,

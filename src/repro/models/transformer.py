@@ -149,6 +149,41 @@ def init_params(key, ap: ArchPlan) -> Params:
 # ---------------------------------------------------------------------------
 
 
+def _seq_parallel_active(ctx: ParallelCtx, cfg: ModelConfig,
+                         n_tokens: int, seq_len: int,
+                         explicit: Optional[bool]) -> bool:
+    """Trace-time resolution of the sequence-parallel residual layout.
+
+    ``explicit`` (a caller's ``sp=`` argument, e.g. the training step's)
+    overrides the ``ctx.seq_parallel`` knob.  Either way SP only engages
+    when fast TP axes exist and divide the sequence (psum_scatter tiling
+    needs ``seq_len % fast == 0``; indivisible call sites fall back to the
+    fused path, which is numerically identical).  Resolved from the knob,
+    SP additionally requires a non-recurrent family (recurrences need the
+    full sequence — the same gate ``build_train_step`` applies), and
+    ``"auto"`` asks the active autotuner with this call site's residual
+    message size — builders trace inside ``autotune.using(ar_table)``, so
+    each executable dispatches against its own table (DESIGN.md §10).
+    """
+    if not ctx.tp_fast:
+        return False
+    fast = hier.axes_size(ctx.tp_fast)
+    if fast <= 1 or seq_len % fast:
+        return False
+    if explicit is not None:
+        return bool(explicit)
+    mode = ctx.seq_parallel
+    if mode == "off" or cfg.family in ("ssm", "hybrid"):
+        return False
+    if mode == "on":
+        return True
+    from ..core import autotune
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    slow = hier.axes_size(ctx.tp_slow) if ctx.tp_slow else 1
+    return autotune.resolve_sp(n_tokens * cfg.d_model * itemsize, fast,
+                               slow, jnp.dtype(cfg.dtype).name)
+
+
 def _residual(x, partial, ctx: ParallelCtx, sp: bool):
     if sp:
         return x + hier.tp_reduce_scatter(partial, ctx, dim=1)
@@ -337,19 +372,25 @@ def encoder_forward(params: Params, frames, ap: ArchPlan, ctx: ParallelCtx,
 
 
 def forward_lm(params: Params, tokens, ap: ArchPlan, ctx: ParallelCtx, *,
-               sp: bool = False, scan_layers: bool = True,
+               sp: Optional[bool] = None, scan_layers: bool = True,
                patch_embeds=None, frame_embeds=None,
                collect_state: bool = False, chunk: int = 0,
                layer_map=None, enc_layer_map=None, remat: bool = False):
     """Returns (logits_local, aux_loss, states_or_None, enc_out_or_None).
 
-    logits_local: (B, S[_loc if sp], V_local) vocab-sharded.
+    logits_local: (B, S, V_local) vocab-sharded (a sequence-parallel
+    residual stream is gathered back to full S before the vocab head).
     states: per-layer pytree stacked on a leading layer axis (prefill cache
     seeds) when ``collect_state``.
+
+    ``sp=None`` (serve-side prefill builders) resolves the sequence-
+    parallel layout from ``ctx.seq_parallel`` per call site; an explicit
+    bool (the training step) forces it, subject to the divisibility guard
+    (see :func:`_seq_parallel_active`).
     """
     cfg = ap.cfg
     B, Sq = tokens.shape
-    sp_active = sp and bool(ctx.tp_fast)
+    sp_active = _seq_parallel_active(ctx, cfg, B * Sq, Sq, sp)
     if patch_embeds is None:
         x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad,
                            sp=sp_active)
@@ -363,8 +404,8 @@ def forward_lm(params: Params, tokens, ap: ArchPlan, ctx: ParallelCtx, *,
     enc_out = None
     enc_kv_all = None
     if cfg.enc_layers:
-        enc_out = encoder_forward(params, frame_embeds, ap, ctx, sp=sp,
-                                  scan_layers=scan_layers,
+        enc_out = encoder_forward(params, frame_embeds, ap, ctx,
+                                  sp=sp_active, scan_layers=scan_layers,
                                   layer_map=enc_layer_map)
         # Precompute per-layer cross K/V once (also the decode cache seed).
         def xkv(bp):
@@ -685,7 +726,8 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
                   ap: ArchPlan, ctx: ParallelCtx, *,
                   scan_layers: bool = True, layer_map=None,
                   attn_chunk: int = 0, slot=None,
-                  return_logits: bool = True):
+                  return_logits: bool = True,
+                  sp: Optional[bool] = None):
     """Chunked prefill: run C prompt tokens against the decode cache.
 
     tokens: (B, C) int32; positions: (B, C) write positions.  Returns
@@ -695,6 +737,17 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
     host-side ``dynamic_update_slice`` round trips.
     ``return_logits=False`` skips the final norm + vocab head entirely
     (logits come back None) — intermediate chunks only feed the cache.
+
+    ``sp`` selects the sequence-parallel residual layout (default: resolve
+    from ``ctx.seq_parallel`` on this chunk's message size, like
+    ``forward_lm``): the residual stream stays sharded on the chunk dim
+    over the fast TP axes, the post-``wo``/post-``wd`` projections end in
+    ``tp_reduce_scatter``, norms run on sequence shards, and
+    ``tp_all_gather`` restores the full chunk only for the QKV / up-proj
+    inputs — bitwise-equal to the fused path, with per-collective wire
+    bytes halved and activations between collectives shrunk by the
+    fast-axis size (DESIGN.md §10).  K/V writes always see the full
+    chunk, so the cache contents are layout-independent.
 
     Attention-only families (dense) only: recurrent states (ssm/hybrid/
     rwkv) advance token-by-token and cannot skip pad tokens, and MoE
@@ -708,15 +761,17 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
             f"not {cfg.family!r}")
     if "k_scale" in cache:
         raise NotImplementedError("chunked prefill with kv_quant")
+    B, C = tokens.shape
+    sp = _seq_parallel_active(ctx, cfg, B * C, C, sp)
     block_tbl = cache.get("block_tbl")
     kv_cache = {k2: v for k2, v in cache.items() if k2 != "block_tbl"}
-    x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad)
+    x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad, sp=sp)
 
     def body(x, inp):
         bp, cl = inp
         if layer_map is not None:
             bp = layer_map(bp)
-        h = L.apply_norm(x, bp["ln1"], cfg)
+        h = _gathered(L.apply_norm(x, bp["ln1"], cfg), ctx, sp)
         # Same residual idiom as block_decode: unprojected attention output
         # through _residual_proj (overlapped when ctx asks for it).
         attn_out, kv_new = L.attention_chunk_step(
@@ -724,11 +779,11 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
             q_mask_tbl=ap.q_mask_tbl, chunk=attn_chunk,
             project=False, block_tbl=block_tbl, slot=slot)
         x = _residual_proj(x, attn_out, bp["attn"]["wo"],
-                           "bsqh,qhd->bsd", ctx, sp=False)
-        h2 = L.apply_norm(x, bp["ln2"], cfg)
+                           "bsqh,qhd->bsd", ctx, sp=sp)
+        h2 = _gathered(L.apply_norm(x, bp["ln2"], cfg), ctx, sp)
         x = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2, cfg),
                            L.mlp_down_w(bp["mlp"], cfg), "bsf,fd->bsd",
-                           ctx, sp=False)
+                           ctx, sp=sp)
         return x, kv_new
 
     if scan_layers:
@@ -746,6 +801,8 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
     if not return_logits:
         return None, new_cache
     x = L.apply_norm(x, params["final_norm"], cfg)
+    if sp:
+        x = hier.tp_all_gather(x, ctx, dim=1)
     logits = L.lm_logits(params["embed"], x)
     return logits, new_cache
 

@@ -18,7 +18,12 @@ shard_map'd production step (one engine, two deployments), and every
 builder captures its ``ar_table`` at build time (``autotune.using``) so
 ``ar_strategy="auto"`` call sites resolve against the right table even
 when jit defers tracing — in disaggregated serving the prefill and decode
-pools' builders therefore dispatch against *different* tables.
+pools' builders therefore dispatch against *different* tables.  The same
+scope also resolves ``ctx.seq_parallel="auto"``: prefill-shaped builders
+(full prefill / admission / chunked admission / prefill-only) ask the
+captured tuner whether their residual message size warrants the
+sequence-parallel RS+AG layout, while decode builders never decompose
+(DESIGN.md §10).
 
 Invariants the serve-side steps rely on (details in ``inference.kv_cache``
 and DESIGN.md §7-§9): stale-slot / pad / rejected-draft K/V writes are
@@ -318,11 +323,13 @@ def build_decode_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
 def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                   scan_layers: bool = True, s_max: int,
                   fsdp_serve: bool = False, attn_chunk=None,
-                  sp: bool = False,
+                  sp: Optional[bool] = None,
                   frame_embeds: bool = False, patch_embeds: bool = False,
                   ar_table: Optional[str] = None) -> BuiltStep:
     """Prefill: run the full prompt, return (first_token, cache).
-    ``ar_table`` as in :func:`build_decode_step`."""
+    ``ar_table`` as in :func:`build_decode_step`.  ``sp=None`` resolves
+    the sequence-parallel residual layout from ``ctx.seq_parallel`` per
+    prompt length (an explicit bool forces it)."""
     cfg = ap.cfg
     ar_tuner = autotune.tuner_for(ar_table)
     from ..models.transformer import init_params
@@ -426,19 +433,49 @@ def _serve_params(ap: ArchPlan, serve_ctx, mesh, fsdp_serve):
     return pspecs, fdims, layer_map, full_params
 
 
+def _full_vocab(logits, serve_ctx: ParallelCtx):
+    """Gather vocab-sharded logits (vocab last) back to the full vocab —
+    the one shared gather every sampled path routes through."""
+    if not serve_ctx.has_tp:
+        return logits
+    return lax.all_gather(logits, serve_ctx.tp_axes,
+                          axis=logits.ndim - 1, tiled=True)
+
+
 def _sample_next(logits, serve_ctx: ParallelCtx, cfg, rng,
                  temperature: float, top_k: int):
     """Next-token sampling over (possibly vocab-sharded) logits, on device.
     temperature=0 -> sharded greedy argmax; otherwise gather the vocab and
     run layers.sample_token (temperature / top-k)."""
     if temperature > 0.0:
-        full = logits
-        if serve_ctx.has_tp:
-            full = lax.all_gather(logits, serve_ctx.tp_axes, axis=1,
-                                  tiled=True)
-        return L.sample_token(full, rng, temperature=temperature,
+        return L.sample_token(_full_vocab(logits, serve_ctx), rng,
+                              temperature=temperature,
                               top_k=top_k, vocab_real=cfg.vocab_size)
     return L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
+
+
+def _sample_next_slots(logits, serve_ctx: ParallelCtx, cfg, keys, idx,
+                       temperature: float, top_k: int):
+    """Per-slot next-token sampling for the fused serve step.
+
+    Slot ``s`` draws with the *stateless* key ``fold_in(keys[s], idx[s])``
+    — the request's own sampling chain (``scheduler.request_sampling_key``),
+    independent of the global step schedule and of which other slots are
+    active.  That schedule-independence is what makes sampled
+    (temperature > 0) disaggregated streams token-identical to colocated
+    serving and preemption recomputes resample their original tokens.
+    temperature=0 -> sharded greedy argmax (keys untouched).
+    """
+    if temperature <= 0.0:
+        return L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
+    full = _full_vocab(logits, serve_ctx)
+    subs = jax.vmap(jax.random.fold_in)(keys, idx)
+    return jax.vmap(
+        lambda row, k2: L.sample_token(row[None], k2,
+                                       temperature=temperature,
+                                       top_k=top_k,
+                                       vocab_real=cfg.vocab_size)[0]
+    )(full, subs)
 
 
 def build_cache_init(ap: ArchPlan, ctx: ParallelCtx, mesh, *, slots: int,
@@ -475,9 +512,13 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
     """Fused continuous-batching step: decode all slots + sample + advance
     the device-side slot state.
 
-    (params, cache, state, rng) -> (emitted, done, state', cache') with
+    (params, cache, state) -> (emitted, done, state', cache') with
     state = {tokens, positions, remaining: (slots,) i32, active: (slots,)
-    bool}.  Inactive slots keep decoding into their own (dense) row or the
+    bool, rng: (slots, 2) u32 per-request sampling-chain base keys,
+    sample_idx: (slots,) i32 tokens sampled so far}.  Slot ``s`` samples
+    with ``fold_in(rng[s], sample_idx[s])`` — the request's own chain, so
+    sampled streams are schedule-independent (see ``_sample_next_slots``).
+    Inactive slots keep decoding into their own (dense) row or the
     trash block (paged) — no masking in the hot path; ``emitted`` holds the
     sampled token where active, the stale token elsewhere, and ``done``
     flags slots that finished this step (caller frees/refills them).
@@ -492,7 +533,7 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
     pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
                                                       fsdp_serve)
 
-    def step(params, cache, state, rng):
+    def step(params, cache, state):
         params = full_params(params)
         active = state["active"]
         with autotune.using(ar_tuner):
@@ -500,14 +541,17 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                 params, cache, state["tokens"], state["positions"], ap,
                 serve_ctx, scan_layers=scan_layers, layer_map=layer_map,
                 attn_chunk=attn_chunk)
-        nxt = _sample_next(logits, serve_ctx, cfg, rng, temperature, top_k)
+        nxt = _sample_next_slots(logits, serve_ctx, cfg, state["rng"],
+                                 state["sample_idx"], temperature, top_k)
         emitted = jnp.where(active, nxt, state["tokens"])
         act_i = active.astype(jnp.int32)
         positions = state["positions"] + act_i
         remaining = state["remaining"] - act_i
         done = active & ((remaining <= 0) | (positions >= s_max - 1))
         state2 = {"tokens": emitted, "positions": positions,
-                  "remaining": remaining, "active": active & ~done}
+                  "remaining": remaining, "active": active & ~done,
+                  "rng": state["rng"],
+                  "sample_idx": state["sample_idx"] + act_i}
         return emitted, done, state2, new_cache
 
     if mesh is None:
@@ -518,8 +562,9 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
         n_blocks=n_blocks))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     sspec = {"tokens": P(None), "positions": P(None),
-             "remaining": P(None), "active": P(None)}
-    in_specs = (pspecs, cspecs, sspec, P(None))
+             "remaining": P(None), "active": P(None),
+             "rng": P(None, None), "sample_idx": P(None)}
+    in_specs = (pspecs, cspecs, sspec)
     out_specs = (P(None), P(None), sspec, cspecs)
     fn = shard_map(step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_vma=False)
@@ -552,10 +597,7 @@ def _spec_targets(logits, drafts, serve_ctx: ParallelCtx, cfg, rng,
         tgt = L.greedy_sample(flat, serve_ctx, cfg.vocab_size)
         tgt = tgt.reshape(B, C)
         return tgt, drafts == tgt[:, :k]
-    full = logits
-    if serve_ctx.has_tp:
-        full = lax.all_gather(logits, serve_ctx.tp_axes, axis=2, tiled=True)
-    lf = full.astype(jnp.float32)
+    lf = _full_vocab(logits, serve_ctx).astype(jnp.float32)
     V = lf.shape[-1]
     lf = jnp.where((jnp.arange(V) < cfg.vocab_size)[None, None, :], lf,
                    L.NEG_INF)

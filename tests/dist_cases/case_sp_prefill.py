@@ -1,0 +1,101 @@
+"""Sequence-parallel prefill on the (2 pod x 4 model) mesh (DESIGN.md §10).
+
+Parity bar: with ``seq_parallel="on"`` the residual stream is
+sequence-sharded between sublayers (RS+AG replace the fused per-residual
+all-reduce) and the greedy trace must still equal the local dense
+batcher's tokens bitwise — through full and chunked admission into a
+paged cache, combined with ar_strategy="auto" + overlap_matmul, and
+through the disaggregated prefill pool's tp=8x2pods -> tp=1 handoff.
+Structure bar: the SP admission executable must actually lower with
+reduce-scatter collectives where the fused flat path lowers a single
+all-reduce per residual.
+"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.compat import AxisType, make_mesh
+from repro.core import ParallelCtx
+from repro.models import ModelConfig, make_plan, init_params
+from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
+from repro.inference.scheduler import ContinuousBatcher, make_trace
+
+mesh = make_mesh((2, 4), ("pod", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = ModelConfig(name="sp-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=96, dtype=jnp.float32)
+key = jax.random.PRNGKey(0)
+S_MAX, SLOTS = 64, 3
+
+
+def trace():
+    return make_trace(8, mean_in=10, mean_out=6, rate=3.0,
+                      vocab=cfg.vocab_size, seed=4)
+
+
+# -- local dense reference ---------------------------------------------------
+ap1 = make_plan(cfg, 1)
+p1 = init_params(key, ap1)
+ref = {r.rid: r.output for r in
+       ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX).run(trace())}
+assert all(v is not None for v in ref.values())
+
+apN = make_plan(cfg, 8)
+pN = init_params(key, apN)
+
+# -- structural check: SP lowers reduce-scatters, fused flat does not --------
+tok = jnp.zeros((1, 16), jnp.int32)
+pos = jnp.arange(16, dtype=jnp.int32)[None]
+hlo = {}
+for sp_mode in ("off", "on"):
+    ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                      ar_strategy="flat", seq_parallel=sp_mode)
+    sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
+                              mesh=mesh, block_size=8,
+                              admit_mode="chunked", admit_chunk=16)
+    hlo[sp_mode] = sched._admit_chunked.lower(
+        pN, sched.cache, tok, pos, jnp.int32(0), jnp.int32(15),
+        jax.random.PRNGKey(0)).as_text(dialect="hlo")
+assert "reduce-scatter" not in hlo["off"], \
+    "fused flat admission should lower plain all-reduces"
+assert "reduce-scatter" in hlo["on"], \
+    "SP admission should lower sequence-dim reduce-scatters"
+print("SP lowering structure OK (reduce-scatter only under seq_parallel)")
+
+# -- parity: forced SP, flat strategy, full + chunked admission, paged -------
+for admit_kw in (dict(admit_mode="full"),
+                 dict(admit_mode="chunked", admit_chunk=16)):
+    ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                      ar_strategy="flat", seq_parallel="on")
+    sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
+                              mesh=mesh, block_size=8, **admit_kw)
+    for r in sched.run(trace()):
+        assert np.array_equal(ref[r.rid], r.output), \
+            f"rid {r.rid}: SP {admit_kw['admit_mode']} tokens diverge"
+    print(f"SP parity OK ({admit_kw['admit_mode']} admission)")
+
+# -- parity: SP + autotuned AR + overlapped collective-matmul ----------------
+ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",), ar_strategy="auto",
+                  overlap_matmul=True, overlap_chunks=4, seq_parallel="on")
+sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
+                          mesh=mesh, block_size=8, admit_mode="chunked",
+                          admit_chunk=16)
+for r in sched.run(trace()):
+    assert np.array_equal(ref[r.rid], r.output), f"rid {r.rid} (auto+ov)"
+print("SP + auto + overlap parity OK")
+
+# -- parity: disaggregated prefill pool under SP (mesh pool -> local decode) -
+ctx_p = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
+                    ar_strategy="auto", seq_parallel="on")
+tuner_p = pool_tuner(None)
+pool = PrefillPool(apN, pN, s_max=S_MAX, ctx=ctx_p, mesh=mesh,
+                   ar_table=tuner_p)
+tuner_d = pool_tuner(None)
+decode = ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX,
+                           block_size=8, ar_table=tuner_d)
+coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d)
+done = coord.run(trace())
+for r in done:
+    assert np.array_equal(ref[r.rid], r.output), f"rid {r.rid} (disagg SP)"
+m = coord.metrics(done)
+assert m.completed == len(done)
+print(f"disagg SP prefill pool parity OK ({m.handoffs} handoffs)")
+
+print("sp prefill OK")

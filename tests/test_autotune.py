@@ -158,3 +158,77 @@ def test_install_from_path_env(tmp_path, monkeypatch):
         assert installed.net.name == "perlmutter"
     finally:
         at.install(prev)
+
+
+def test_key_parse_key_roundtrip():
+    """_parse_key returns the bucket's upper bound (bucket_bytes), never
+    the original message size — and re-keying the parsed tuple must be
+    the identity (the invariant refine() relies on)."""
+    for msg in (1, 300, 64 * KB, 100 * KB, 100 * KB + 1, 64 * MB):
+        key = at._key(msg, 16, 4, "bfloat16")
+        bucket_bytes, fast, slow, dtype = at._parse_key(key)
+        assert (fast, slow, dtype) == (16, 4, "bfloat16")
+        assert bucket_bytes >= min(msg, 256)       # bucket floor is 2**8
+        assert bucket_bytes >= msg or msg <= 256
+        assert bucket_bytes < 2 * max(msg, 256)    # tight upper bound
+        assert at._key(bucket_bytes, fast, slow, dtype) == key
+    # exact powers of two are their own bucket bound
+    assert at._parse_key(at._key(256 * KB, 8, 2, "float32"))[0] == 256 * KB
+
+
+def test_refine_chunks_use_bucket_bytes():
+    """refine() recomputes rd_chunks from the bucket bound, so a measured
+    hier_rd winner at a large bucket pipelines its slow exchange."""
+    t = at.AutoTuner(cm.TPU_V5E)
+    t.record(16 * MB, 16, 2, "float32", "hier_rd", 1.0e-6)
+    t.record(16 * MB, 16, 2, "float32", "hier_ring", 9.0e-6)
+    assert t.refine() >= 1
+    choice = t.choose(16 * MB, 16, 2, "float32")
+    assert choice.strategy == "hier_rd"
+    assert choice.rd_chunks == at._rd_chunks_for(
+        at._parse_key(at._key(16 * MB, 16, 2, "float32"))[0], 16)
+    assert choice.rd_chunks > 1
+
+
+def test_sp_dispatch_crossover_tpu_v5e():
+    """seq_parallel='auto' acceptance: decode-sized messages stay on the
+    fused (hierarchical-RD) path, prefill-sized messages decompose into
+    RS+AG — on both the bench mesh topology (fast=4, slow=2) and the
+    production frame (fast=16, slow=4)."""
+    for fast, slow in ((4, 2), (16, 4)):
+        assert not at.analytic_sp_choice(16 * KB, fast, slow, cm.TPU_V5E)
+        assert at.analytic_sp_choice(1 * MB, fast, slow, cm.TPU_V5E)
+        assert at.analytic_sp_choice(16 * MB, fast, slow, cm.TPU_V5E)
+    # the fused pick SP is compared against at decode sizes is NVRAR
+    assert at.analytic_choice(16 * KB, 16, 4, cm.TPU_V5E).strategy \
+        == "hier_rd"
+    # no fast axes -> nothing to decompose
+    assert not at.analytic_sp_choice(16 * MB, 1, 4, cm.TPU_V5E)
+    t = at.predict_sp_times(1 * MB, 16, 4, cm.TPU_V5E)
+    assert t["fused"] > 0 and t["rs_ag"] > 0
+
+
+def test_sp_table_persistence_and_lookup_log(tmp_path):
+    t = at.AutoTuner(cm.TPU_V5E)
+    assert not t.choose_sp(16 * KB, 4, 2)
+    assert t.choose_sp(4 * MB, 4, 2)
+    assert t.choose_sp(4 * MB + 1, 4, 2) == t.choose_sp(4 * MB, 4, 2)
+    assert len(t.sp_table) == 3          # two buckets + the 4MB+1 bucket
+    assert len(t.sp_lookup_buckets()) == len(t.sp_table)
+    p = os.path.join(tmp_path, "sp_table.json")
+    t.save(p)
+    doc = json.load(open(p))
+    assert doc["sp_table"] == {k: bool(v) for k, v in t.sp_table.items()}
+    t2 = at.AutoTuner.load(p)
+    assert t2.sp_table == t.sp_table
+    # a persisted entry overrides the analytic seed
+    key = at._key(16 * KB, 4, 2, "bfloat16")
+    t2.sp_table[key] = True
+    assert t2.choose_sp(16 * KB, 4, 2) is True
+
+
+def test_seq_parallel_mode_validation():
+    for mode in ("off", "on", "auto"):
+        assert ParallelCtx(seq_parallel=mode).seq_parallel == mode
+    with pytest.raises(ValueError):
+        ParallelCtx(seq_parallel="maybe")

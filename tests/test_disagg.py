@@ -179,6 +179,61 @@ def test_disagg_dense_decode_pool(tiny_lm):
         np.testing.assert_array_equal(ref[rid], got[rid])
 
 
+def test_disagg_sampled_trace_token_identical_to_colocated(tiny_lm):
+    """temperature > 0: every request samples from its own stateless key
+    chain (scheduler.request_sampling_key) whose base key rides
+    KVBundle.rng, so the sampled disagg stream is token-identical to
+    colocated paged serving — for full and chunked prefill pools (the PR 5
+    fix for the per-pool-RNG divergence gap)."""
+    cfg, ap, params = tiny_lm
+    kw = dict(temperature=1.5, top_k=20, seed=0)
+    ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8, **kw)
+    for pool_kw in (dict(**kw),
+                    dict(admit_mode="chunked", admit_chunk=16,
+                         block_size=8, **kw)):
+        got, coord = _disagg(cfg, ap, params, _trace(cfg),
+                             pool_kw=pool_kw,
+                             decode_kw=dict(block_size=8, **kw))
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid], got[rid])
+    # and the stream actually sampled (differs from the greedy trace)
+    greedy = _colocated(cfg, ap, params, _trace(cfg), block_size=8)
+    assert any(not np.array_equal(greedy[rid], ref[rid]) for rid in ref)
+
+
+def test_disagg_sampled_survives_preemption(tiny_lm):
+    """Sampled disagg parity must hold through decode-pool preemption:
+    the recompute re-prefills with the same (seed, rid) chain, so the
+    resampled tokens are the originals."""
+    cfg, ap, params = tiny_lm
+    rng = np.random.default_rng(5)
+    kw = dict(temperature=1.5, top_k=20, seed=0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        16).astype(np.int32),
+                    max_new=40, arrival_s=0.0) for i in range(3)]
+
+    def clone():
+        return [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                        arrival_s=0.0) for r in reqs]
+
+    # isolated single-slot references (never preempted)
+    iso = {}
+    for r in clone():
+        sched = ContinuousBatcher(ap, params, slots=1, s_max=96, **kw)
+        sched.run([r])
+        iso[r.rid] = r.output
+    pool = PrefillPool(ap, params, s_max=96, **kw)
+    decode = ContinuousBatcher(ap, params, slots=3, s_max=96,
+                               block_size=8, n_blocks=13, **kw)
+    coord = DisaggCoordinator(pool, decode)
+    done = coord.run(clone())
+    m = coord.metrics(done)
+    assert m.preemptions > 0, "pool sized to force preemption"
+    for r in done:
+        np.testing.assert_array_equal(iso[r.rid], r.output)
+
+
 # ---------------------------------------------------------------------------
 # coordinator: queue behavior under decode-pool OOM / preemption
 # ---------------------------------------------------------------------------

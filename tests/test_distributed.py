@@ -40,6 +40,12 @@ def test_disagg_mesh_parity(dist_runner):
 
 
 @pytest.mark.dist
+def test_sp_prefill_parity(dist_runner):
+    out = dist_runner("case_sp_prefill.py")
+    assert "sp prefill OK" in out
+
+
+@pytest.mark.dist
 def test_train_parity(dist_runner):
     out = dist_runner("case_train_parity.py")
     assert "train parity OK" in out

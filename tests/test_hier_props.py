@@ -66,3 +66,32 @@ def test_int8_group_quantization_error_bound(nelem, seed):
     q = np.clip(np.round(xp / scale), -127, 127)
     err = np.abs(q * scale - xp)
     assert np.all(err <= scale * 0.5 + 1e-12)
+
+
+def test_tp_reduce_scatter_slow_phase_selection(monkeypatch):
+    """PR 5 bugfix regression: tp_reduce_scatter's slow phase must route
+    ``flat`` to lax.psum and EVERY hierarchical strategy through
+    ``_slow_phase`` (the old code buried the flat remap in a conditional
+    that could never fire, and sent hier_ring around _slow_phase)."""
+    import jax.numpy as jnp
+    from repro.core import hierarchical as hier
+    from repro.core.pcontext import ParallelCtx
+
+    calls = []
+    monkeypatch.setattr(
+        hier, "_slow_phase",
+        lambda x, slow, ctx: (calls.append(("slow_phase",
+                                            ctx.ar_strategy)), x)[1])
+    monkeypatch.setattr(
+        hier.lax, "psum",
+        lambda x, axes: (calls.append(("psum", tuple(axes))), x)[1])
+    x = jnp.ones((4, 8))
+    for strat in ("flat", "hier_ring", "hier_rd", "hier_rd_halving"):
+        calls.clear()
+        ctx = ParallelCtx(tp_slow=("pod",), ar_strategy=strat)
+        out = hier.tp_reduce_scatter(x, ctx, dim=0)
+        assert out.shape == x.shape
+        if strat == "flat":
+            assert calls == [("psum", ("pod",))], (strat, calls)
+        else:
+            assert calls == [("slow_phase", strat)], (strat, calls)

@@ -1,0 +1,138 @@
+"""BlockAllocator.truncate under adversarial interleavings.
+
+Two layers of guarantee:
+
+* host side — randomized grow/truncate/preempt/free/defragment sequences
+  must keep the free-list/table partition invariants (``check()``), keep
+  every slot's table row equal to its owned blocks, and bump ``version``
+  exactly when the table mutates (callers skip device uploads otherwise);
+* device side — blocks a truncate returns to the pool are immediately
+  reused (LIFO) by other slots' growth; the truncating slot's attention
+  output must stay bitwise equal to an isolated single-slot run, i.e. a
+  neighbour's K/V written into the recycled blocks can never leak back
+  (the write-ordering invariant of DESIGN.md §7, here exercised through
+  the speculative-rollback path that motivated ``truncate``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.inference.kv_cache import BlockAllocator, TRASH_BLOCK
+from repro.inference.scheduler import ContinuousBatcher, Request
+from repro.inference.speculative import Drafter
+from repro.models.transformer import make_plan, init_params
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), ap)
+    return cfg, ap, params
+
+
+def test_truncate_interleaved_randomized():
+    """600 random ops across 4 slots on a deliberately tight pool."""
+    rng = np.random.default_rng(7)
+    bs, max_blocks = 4, 8
+    a = BlockAllocator(n_blocks=21, block_size=bs, slots=4,
+                       max_blocks_per_slot=max_blocks)
+    tokens = [0, 0, 0, 0]          # logical token coverage per slot
+    ops = np.array(["grow", "truncate", "preempt", "free", "defrag"])
+    for _ in range(600):
+        s = int(rng.integers(4))
+        op = str(rng.choice(ops, p=[0.45, 0.25, 0.1, 0.1, 0.1]))
+        ver = a.version
+        if op == "grow":
+            tgt = min(tokens[s] + int(rng.integers(1, 2 * bs + 1)),
+                      max_blocks * bs)
+            grew = a.blocks_for(tgt) > len(a.owned(s))
+            if a.ensure(s, tgt):
+                tokens[s] = max(tokens[s], tgt)
+                assert (a.version > ver) == grew, (op, s, tgt)
+            else:
+                assert a.version == ver, "failed ensure mutated the table"
+        elif op == "truncate":
+            tgt = int(rng.integers(0, tokens[s] + 1))
+            own_before = len(a.owned(s))
+            keep = a.blocks_for(tgt)
+            tail = max(own_before - keep, 0)
+            freed = a.truncate(s, tgt)
+            assert freed == tail, (freed, tail)
+            assert len(a.owned(s)) == own_before - freed
+            assert (a.version > ver) == (freed > 0)
+            # the released tail is immediately reusable, hottest first
+            assert a.free_blocks >= freed
+            tokens[s] = min(tokens[s], tgt)
+        elif op == "preempt":
+            n = len(a.owned(s))
+            assert a.preempt(s) == n
+            assert (a.table[s] == TRASH_BLOCK).all()
+            assert (a.version > ver) == (n > 0)
+            tokens[s] = 0
+        elif op == "free":
+            n = len(a.owned(s))
+            assert a.free(s) == n
+            assert (a.version > ver) == (n > 0)
+            tokens[s] = 0
+        else:
+            perm = a.defragment()
+            if perm is not None:
+                assert a.version > ver
+                assert sorted(perm.tolist()) == list(range(a.n_blocks))
+                assert perm[TRASH_BLOCK] == TRASH_BLOCK
+            else:
+                assert a.version == ver
+        a.check()                  # free list + ownership partition pool
+        for sl in range(4):
+            # table rows past the owned prefix must be trash (truncated
+            # tails may never stay addressable through the table)
+            own = a.owned(sl)
+            assert (a.table[sl, len(own):] == TRASH_BLOCK).all(), sl
+    for sl in range(4):
+        a.free(sl)
+    a.check()
+    assert a.used_blocks == 0 and a.free_blocks == a.n_blocks - 1
+
+
+class _JunkDrafter(Drafter):
+    """Proposes deliberately wrong tokens: every draft is rejected, so
+    every verify step writes a K/V tail that truncate must roll back."""
+
+    def __init__(self, vocab: int):
+        super().__init__()
+        self.vocab = vocab
+
+    def _propose(self, slot, hist, k):
+        last = hist[-1] if hist else 0
+        return [(last + 1 + i) % self.vocab for i in range(k)]
+
+
+def test_truncated_tails_never_leak_across_slots(tiny_lm):
+    """Spec decoding with an always-rejected drafter truncates a K/V tail
+    on every step while a tight pool forces the freed blocks straight
+    into the other slots' growth; tokens must equal isolated references.
+    """
+    cfg, ap, params = tiny_lm
+    rng = np.random.default_rng(3)
+    protos = [(rng.integers(0, cfg.vocab_size, 9 + 7 * i).astype(np.int32),
+               18) for i in range(3)]
+    refs = {}
+    for i, (p, n) in enumerate(protos):
+        s1 = ContinuousBatcher(ap, params, slots=1, s_max=96)
+        r = Request(rid=i, prompt=p, max_new=n)
+        s1.run([r])
+        refs[i] = r.output
+    sched = ContinuousBatcher(
+        ap, params, slots=3, s_max=96, block_size=4, n_blocks=25,
+        spec_mode="replay", spec_k=4, drafter=_JunkDrafter(cfg.vocab_size))
+    done = sched.run([Request(rid=i, prompt=p, max_new=n, arrival_s=0.0)
+                      for i, (p, n) in enumerate(protos)])
+    m = sched.metrics(done)
+    assert m.accepted_tokens == 0, "junk drafts must all be rejected"
+    assert m.spec_steps > 0
+    for r in done:
+        np.testing.assert_array_equal(refs[r.rid], r.output)
+    sched.alloc.check()
+    assert sched.alloc.used_blocks == 0
