@@ -1,0 +1,169 @@
+"""Fault-injected serving benchmark: goodput degradation under a
+deterministic fault plan (DESIGN.md §11, docs/robustness.md).
+
+The disaggregated pool pair replays the two phase-split trace shapes
+under a seeded :class:`~repro.inference.faults.FaultPlan` swept over a
+fault-rate ladder.  Because fault events are hash-thresholded (an event
+fires iff ``hash_unit(...) < rate``), a higher rate injects a strict
+superset of a lower rate's events — so the useful-work goodput fraction
+``total_new / (total_new + wasted)`` (wasted = tokens decoded, then
+discarded by a quarantine/OOM eviction and re-decoded) must degrade
+monotonically in the rate, and every non-shed request must still emit
+tokens bitwise-identical to the fault-free colocated reference
+(recompute-from-scratch replays the stateless sampling chain).  Both
+properties are asserted per cell, not just reported; tokens-per-step
+throughput is also recorded but not monotonicity-gated — batching slack
+absorbs recompute work unevenly, so only the work fraction is exact.
+
+    python -m benchmarks.bench_faults --sweep    # writes BENCH_faults.json
+    python -m benchmarks.bench_faults            # one smoke cell
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .common import emit
+
+S_MAX = 128
+SLOTS = 4
+N_REQ = 12
+RATES = (0.0, 0.05, 0.1, 0.2)
+TRACES = {
+    # name -> (mean_in, mean_out): the two ends of the phase split
+    "decode_heavy": (8, 24),
+    "prefill_heavy": (40, 4),
+}
+
+
+
+def _setup():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models.transformer import make_plan, init_params
+    cfg = get_smoke("llama3.2-1b")
+    ap = make_plan(cfg, 1)
+    params = init_params(jax.random.PRNGKey(0), ap)
+    return cfg, ap, params
+
+
+def _trace(cfg, mean_in, mean_out, seed=1):
+    from repro.inference.scheduler import make_trace
+    reqs = make_trace(N_REQ, mean_in=mean_in, mean_out=mean_out, rate=2.0,
+                      vocab=cfg.vocab_size, seed=seed)
+    for r in reqs:
+        assert r.prompt.shape[0] + 1 <= S_MAX, r.prompt.shape
+    return reqs
+
+
+def _plan(rate: float):
+    from repro.inference.faults import FaultPlan
+    return FaultPlan(seed=7, handoff_drop=rate, handoff_corrupt=rate / 2,
+                     prefill_stall=rate / 2, nan_logits=rate / 5)
+
+
+def _reference(cfg, ap, params, mean_in, mean_out):
+    """Fault-free colocated replay: the bitwise-parity oracle."""
+    from repro.inference.scheduler import ContinuousBatcher
+    sched = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
+                              block_size=8)
+    done = sched.run(_trace(cfg, mean_in, mean_out))
+    assert all(r.output is not None for r in done)
+    return {r.rid: r.output for r in done}
+
+
+def _fault_cell(cfg, ap, params, name, mean_in, mean_out, rate, ref):
+    from repro.inference.disagg import (DisaggCoordinator, PrefillPool,
+                                        pool_tuner)
+    from repro.inference.faults import FaultInjector
+    from repro.inference.scheduler import ContinuousBatcher
+    inj = FaultInjector(_plan(rate)) if rate > 0 else None
+    pool = PrefillPool(ap, params, s_max=S_MAX)
+    tuner = pool_tuner(None)
+    decode = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
+                               block_size=8, ar_table=tuner, injector=inj)
+    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner,
+                              injector=inj)
+    done = coord.run(_trace(cfg, mean_in, mean_out))
+    shed = [r for r in done if r.output is None]
+    # shed requests are *reported*, never silently dropped
+    for r in shed:
+        assert r.shed_reason, f"rid {r.rid} lost without a shed_reason"
+    for r in done:      # every survivor matches the fault-free oracle
+        if r.output is not None:
+            assert np.array_equal(ref[r.rid], r.output), \
+                f"rid {r.rid}: tokens diverge from fault-free reference"
+    m = coord.metrics(done)
+    assert m.completed + m.shed_requests == N_REQ, \
+        (m.completed, m.shed_requests)
+    wasted = m.decode_pool["wasted_tokens"]
+    frac = m.total_new_tokens / max(m.total_new_tokens + wasted, 1)
+    row = {"trace": name, "rate": rate, "mean_in": mean_in,
+           "mean_out": mean_out, "goodput_frac": frac,
+           "goodput_tok_per_step": m.total_new_tokens / max(m.steps, 1),
+           "wasted_tokens": wasted,
+           "quarantines": m.decode_pool["quarantines"], **m.to_dict()}
+    return row, m
+
+
+def sweep(out_path: str = "BENCH_faults.json"):
+    cfg, ap, params = _setup()
+    rows = []
+    for name, (mi, mo) in TRACES.items():
+        ref = _reference(cfg, ap, params, mi, mo)
+        goodputs = []
+        for rate in RATES:
+            row, m = _fault_cell(cfg, ap, params, name, mi, mo, rate, ref)
+            rows.append(row)
+            goodputs.append(row["goodput_frac"])
+            emit(f"faults/{name}_r{rate}", row["goodput_frac"],
+                 f"tok_per_step={row['goodput_tok_per_step']:.2f};"
+                 f"steps={m.steps};retries={m.handoff_retries};"
+                 f"reprefills={m.handoff_reprefills};"
+                 f"quarantines={row['quarantines']};shed={m.shed_requests}")
+        for lo, hi in zip(goodputs[1:], goodputs[:-1]):
+            assert lo <= hi + 1e-9, \
+                f"{name}: goodput not monotone in fault rate {goodputs}"
+        assert goodputs[RATES.index(0.1)] > 0.0, \
+            f"{name}: zero goodput at 10% handoff-fault rate"
+    summary = {
+        "parity": "bitwise vs fault-free colocated (asserted per cell)",
+        "monotone_goodput": True,
+        "max_rate": max(RATES),
+    }
+    with open(out_path, "w") as f:
+        json.dump({"arch": "llama3.2-1b(smoke)", "s_max": S_MAX,
+                   "slots": SLOTS, "n_requests": N_REQ, "rates": RATES,
+                   "summary": summary, "rows": rows},
+                  f, indent=2, sort_keys=True, default=float)
+    emit("faults/json_written", float(len(rows)), out_path)
+    return rows
+
+
+def run():
+    cfg, ap, params = _setup()
+    name, (mi, mo) = "decode_heavy", TRACES["decode_heavy"]
+    ref = _reference(cfg, ap, params, mi, mo)
+    row, m = _fault_cell(cfg, ap, params, name, mi, mo, 0.1, ref)
+    emit("faults/smoke", row["goodput_frac"],
+         f"tok_per_step={row['goodput_tok_per_step']:.2f};"
+         f"retries={m.handoff_retries};shed={m.shed_requests}")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="fault-rate ladder x both trace shapes "
+                         "(BENCH_faults.json)")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args(argv)
+    if args.sweep:
+        sweep(args.out)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

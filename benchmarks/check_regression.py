@@ -9,6 +9,8 @@ baselines and fail on drift.
         [--baseline-spec base/BENCH_spec.json --fresh-spec BENCH_spec.json] \\
         [--baseline-disagg base/BENCH_disagg.json \\
          --fresh-disagg BENCH_disagg.json] \\
+        [--baseline-faults base/BENCH_faults.json \\
+         --fresh-faults BENCH_faults.json] \\
         [--threshold 0.25]
 
 What is compared (chosen to be meaningful on shared CI runners):
@@ -30,6 +32,12 @@ What is compared (chosen to be meaningful on shared CI runners):
   logical-step metrics per trace shape, plus the per-pool AR buckets
   (the prefill > decode bucket ordering is asserted inside the bench
   itself; here we gate drift of the deterministic fields).
+* ``BENCH_faults.json`` (optional) — fault-injected goodput per
+  (trace, fault rate) cell.  Bitwise parity and goodput monotonicity
+  are asserted inside the bench; the deterministic per-cell counters
+  (goodput fraction, retries, re-prefills, quarantines, sheds) are
+  gated here so a recovery-path change cannot silently alter the
+  fault response.
 
 Exit code 1 with a per-field report when any check trips.
 """
@@ -56,6 +64,12 @@ DISAGG_FIELDS = ("steps", "total_new_tokens", "completed", "preemptions",
 # (rs_ag_us / fused_flat_us) are deliberately ungated (CPU jitter).
 SP_FIELDS = ("per_coll_ratio", "auto_sp", "fused_per_coll_wire_bytes",
              "rs_ag_per_coll_wire_bytes", "rs_ag_collectives")
+# Fault-injected cells: the schedule is a pure hash of (seed, kind, ids),
+# so every counter below is deterministic on any runner.
+FAULT_FIELDS = ("goodput_frac", "goodput_tok_per_step", "ttft_steps_p99",
+                "steps", "total_new_tokens", "completed", "shed_requests",
+                "wasted_tokens", "handoff_retries", "handoff_reprefills",
+                "quarantines")
 # Regret on CPU runners is noisy; gate the mean with extra absolute slack.
 REGRET_ABS_SLACK = 0.5
 
@@ -83,6 +97,10 @@ def _spec_key(row: Dict) -> tuple:
 
 def _disagg_key(row: Dict) -> tuple:
     return (row.get("trace"), row.get("mode"))
+
+
+def _fault_key(row: Dict) -> tuple:
+    return (row.get("trace"), row.get("rate"))
 
 
 def _check_rows(base_rows: List[Dict], fresh_rows: List[Dict], key_fn,
@@ -147,6 +165,8 @@ def main(argv=None) -> int:
     p.add_argument("--fresh-spec", default=None)
     p.add_argument("--baseline-disagg", default=None)
     p.add_argument("--fresh-disagg", default=None)
+    p.add_argument("--baseline-faults", default=None)
+    p.add_argument("--fresh-faults", default=None)
     p.add_argument("--threshold", type=float, default=0.25,
                    help="max allowed relative drift (default 0.25)")
     args = p.parse_args(argv)
@@ -165,6 +185,10 @@ def main(argv=None) -> int:
         _check_rows(_load(args.baseline_disagg)["rows"],
                     _load(args.fresh_disagg)["rows"], _disagg_key,
                     DISAGG_FIELDS, args.threshold, "disagg", failures)
+    if args.baseline_faults and args.fresh_faults:
+        _check_rows(_load(args.baseline_faults)["rows"],
+                    _load(args.fresh_faults)["rows"], _fault_key,
+                    FAULT_FIELDS, args.threshold, "faults", failures)
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)} violations):")

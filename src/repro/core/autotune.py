@@ -35,12 +35,18 @@ import json
 import math
 import os
 import threading
+import warnings
 from typing import Dict, List, Optional, Tuple, Union
 
 from . import comm_model as cm
 
 # Strategies the dispatcher may pick from (ParallelCtx.ar_strategy values).
 DISPATCHABLE = ("flat", "hier_ring", "hier_rd", "hier_rd_halving")
+
+# Persisted-table schema version (``to_json``); bump on incompatible
+# layout changes.  ``load`` treats an unknown version as a corrupt table
+# and degrades to analytic seeding rather than guessing.
+TABLE_VERSION = 1
 
 # Chunked slow-axis exchange kicks in once the per-step inter payload crosses
 # this size (paper Sec. 4.2.1: overlap chunk q's reduce with chunk q+1's
@@ -320,6 +326,7 @@ class AutoTuner:
 
     def to_json(self) -> Dict:
         return {
+            "version": TABLE_VERSION,
             "net": self.net.name,
             "allow_lossy": self.allow_lossy,
             "table": {k: dataclasses.asdict(v)
@@ -332,18 +339,70 @@ class AutoTuner:
             json.dump(self.to_json(), f, indent=2, sort_keys=True)
 
     @classmethod
+    def _degraded(cls, path: str, why: str) -> "AutoTuner":
+        """Degraded-mode fallback for an unusable persisted table: warn
+        and seed a fresh analytic tuner — a serving process must come up
+        with the comm-model dispatch rather than crash on a bad file
+        (DESIGN.md §11)."""
+        warnings.warn(f"ar-table {path!r} unusable ({why}); degrading to "
+                      f"analytic comm-model seeding", RuntimeWarning,
+                      stacklevel=3)
+        return cls()
+
+    @classmethod
     def load(cls, path: str) -> "AutoTuner":
-        with open(path) as f:
-            doc = json.load(f)
-        if "tuned_table" in doc and "table" not in doc:
+        """Load a persisted table, degrading (never raising) on a corrupt
+        or wrong-schema file: unreadable JSON, a non-object document, or
+        an unknown schema version falls back to a fresh analytic tuner
+        with a ``RuntimeWarning``; individually malformed table entries
+        are dropped (counted in the warning) and the rest kept."""
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            return cls._degraded(path, f"unreadable: {e}")
+        if isinstance(doc, dict) and "tuned_table" in doc \
+                and "table" not in doc:
             # accept a BENCH_allreduce.json sweep artifact directly
             doc = doc["tuned_table"]
+        if not isinstance(doc, dict):
+            return cls._degraded(path, f"JSON {type(doc).__name__}, "
+                                       f"not an object")
+        version = doc.get("version", 1)
+        if version != TABLE_VERSION:
+            return cls._degraded(path, f"schema version {version!r} != "
+                                       f"{TABLE_VERSION}")
         net = cm.NETWORKS.get(doc.get("net", "tpu_v5e"), cm.TPU_V5E)
         t = cls(net, allow_lossy=bool(doc.get("allow_lossy", False)))
-        for k, v in doc.get("table", {}).items():
-            t.table[k] = ARChoice(**v)
-        for k, v in doc.get("sp_table", {}).items():
+        table = doc.get("table", {})
+        sp_table = doc.get("sp_table", {})
+        if not isinstance(table, dict) or not isinstance(sp_table, dict):
+            return cls._degraded(path, "table/sp_table not objects")
+        dropped = 0
+        for k, v in table.items():
+            try:
+                _parse_key(k)   # malformed keys never dispatch — reject
+                c = ARChoice(**v)
+                if c.strategy not in DISPATCHABLE:
+                    raise ValueError(f"unknown strategy {c.strategy!r}")
+                if int(c.rd_chunks) < 1:
+                    raise ValueError(f"rd_chunks {c.rd_chunks!r} < 1")
+            except (TypeError, ValueError, AttributeError, IndexError):
+                dropped += 1
+                continue
+            t.table[k] = c
+        for k, v in sp_table.items():
+            try:
+                int(str(k).split("/")[0][1:])   # "b{bucket}/..." shape
+            except (TypeError, ValueError, IndexError):
+                dropped += 1
+                continue
             t.sp_table[k] = bool(v)
+        if dropped:
+            warnings.warn(f"ar-table {path!r}: dropped {dropped} "
+                          f"malformed entr{'y' if dropped == 1 else 'ies'}"
+                          f"; kept {len(t.table) + len(t.sp_table)}",
+                          RuntimeWarning, stacklevel=2)
         return t
 
 
@@ -428,4 +487,5 @@ __all__ = [
     "predict_sp_times", "analytic_sp_choice",
     "active", "install", "install_from_path", "tuner_for", "using",
     "resolve", "resolve_sp", "bucket_of", "DISPATCHABLE",
+    "TABLE_VERSION",
 ]

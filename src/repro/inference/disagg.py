@@ -65,7 +65,9 @@ from ..core import autotune
 from ..core.pcontext import ParallelCtx, LOCAL
 from ..parallel.steps import (build_admit_chunk_step, build_cache_init,
                               build_prefill_only_step)
-from .kv_cache import KVBundle, export_slot, slots_to_heads
+from .faults import FaultInjector
+from .kv_cache import (BundleIntegrityError, KVBundle, export_slot,
+                       slots_to_heads)
 from .scheduler import (ContinuousBatcher, Request, _percentile,
                         request_sampling_key, run_chunked_prefill)
 
@@ -186,7 +188,10 @@ class PrefillPool:
                 self._chunk_mid, self._chunk_final, self._rng, first)
             row = self._table_row[:] if self.block_size > 0 else None
             bundle = export_slot(self.cache, 0, S, kv_map, table_row=row)
+        # seal: the checksum rides the handoff so splice-time verification
+        # catches in-flight corruption (admit_prefilled calls verify())
         bundle.rng = np.asarray(base, np.uint32)
+        bundle.seal()
         self.prefills += 1
         self.prompt_tokens += S
         self.wall_s += time.perf_counter() - t0
@@ -215,6 +220,22 @@ class PrefillPool:
             "ar_buckets_analytic": sorted(self.analytic_buckets),
             "ar_buckets_dispatched": self.tuner.lookup_buckets(),
         }
+
+
+@dataclasses.dataclass
+class _Handoff:
+    """One prefilled context in the handoff queue, with transfer-retry
+    state: ``attempts`` counts failed transfer attempts of *this* bundle
+    (the retry cap), ``next_try`` is the backoff horizon (logical steps),
+    ``prefill_no`` identifies which prefill of the request produced the
+    payload (corruption is a property of the payload, so it is keyed
+    here — a corrupt bundle stays corrupt across retries)."""
+    req: Request
+    tok: int
+    bundle: KVBundle
+    prefill_no: int
+    attempts: int = 0
+    next_try: float = 0.0
 
 
 @dataclasses.dataclass
@@ -252,6 +273,28 @@ class DisaggMetrics:
     decode_ar_bucket: int
     prefill_pool: Dict[str, Any]
     decode_pool: Dict[str, Any]
+    # robustness (DESIGN.md §11; zeros on a fault-free run):
+    # * ``handoff_drops`` / ``handoff_retries`` — transfer attempts lost
+    #   to injected drops / retries scheduled with backoff.
+    # * ``handoff_corrupt`` — corrupt bundles *detected* (checksum
+    #   mismatch at splice time) and routed to re-prefill.
+    # * ``handoff_reprefills`` — contexts recomputed from the prompt
+    #   after exhausting transfer retries or failing verification.
+    # * ``shed_requests`` — never-admitted requests dropped on deadline
+    #   expiry or after ``max_reprefills`` (always reported).
+    # * ``backpressure_steps`` — ticks the prefill pool was blocked by a
+    #   full handoff queue (``ready_cap``) with prompts still pending.
+    # * ``prefill_stall_steps`` / ``decode_stall_steps`` — ticks a pool
+    #   was frozen by an injected stall.
+    handoff_drops: int = 0
+    handoff_retries: int = 0
+    handoff_corrupt: int = 0
+    handoff_reprefills: int = 0
+    shed_requests: int = 0
+    backpressure_steps: int = 0
+    prefill_stall_steps: int = 0
+    decode_stall_steps: int = 0
+    ready_cap: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -268,7 +311,24 @@ class DisaggCoordinator:
 
     def __init__(self, prefill: PrefillPool, decode: ContinuousBatcher, *,
                  prefill_per_step: int = 1,
-                 decode_tuner: Optional[autotune.AutoTuner] = None):
+                 decode_tuner: Optional[autotune.AutoTuner] = None,
+                 injector: Optional[FaultInjector] = None,
+                 max_handoff_retries: int = 3, retry_backoff: float = 1.0,
+                 max_ready: Optional[int] = None, max_reprefills: int = 2,
+                 deadline_s: Optional[float] = None):
+        """Robustness knobs (DESIGN.md §11, all with fault-free-neutral
+        defaults): a transfer attempt lost to an injected drop is retried
+        after ``retry_backoff * attempts`` steps, up to
+        ``max_handoff_retries`` retries; beyond that (or on a splice-time
+        checksum mismatch) the context is *re-prefilled* from the prompt,
+        up to ``max_reprefills`` times, after which the request is shed
+        with reason ``"handoff_failed"`` — every path terminates.
+        ``max_ready`` bounds the handoff queue (default
+        ``max(2 * decode.slots, 8)``): a full queue backpressures the
+        prefill pool instead of growing without bound.  ``deadline_s``
+        is the default TTFT deadline in logical steps (per-request
+        deadlines tighten it); expired never-admitted requests are shed
+        with reason ``"deadline"``."""
         if prefill.cfg.name != decode.cfg.name:
             raise ValueError(f"pool configs differ: {prefill.cfg.name!r} "
                              f"vs {decode.cfg.name!r}")
@@ -281,30 +341,97 @@ class DisaggCoordinator:
             raise ValueError(f"prefill s_max={prefill.s_max} exceeds "
                              f"decode s_max={decode.s_max}; oversized "
                              f"prefills could never hand off")
+        if max_handoff_retries < 0 or max_reprefills < 0:
+            raise ValueError("retry/re-prefill caps must be >= 0")
         self.prefill = prefill
         self.decode = decode
         self.prefill_per_step = prefill_per_step
         self.decode_tuner = decode_tuner
+        self.injector = injector
+        self.max_handoff_retries = max_handoff_retries
+        self.retry_backoff = retry_backoff
+        self.max_ready = max_ready if max_ready is not None \
+            else max(2 * decode.slots, 8)
+        self.max_reprefills = max_reprefills
+        self.deadline_s = deadline_s
         self._records: Dict[int, Dict[str, float]] = {}
         self.transfer_bytes = 0
         self.handoffs = 0
         self.peak_ready = 0
         self.peak_pending = 0
         self._wall = 0.0
+        # robustness counters (reset per run)
+        self.handoff_drops = 0
+        self.handoff_retries = 0
+        self.handoff_corrupt = 0
+        self.handoff_reprefills = 0
+        self.backpressure_steps = 0
+        self.prefill_stall_steps = 0
+        self.decode_stall_steps = 0
+        self._shed: List[Request] = []
+        self._reprefills: Dict[int, int] = {}   # rid -> re-prefill count
+
+    def _shed_req(self, req: Request, now: float, reason: str) -> None:
+        """Drop a never-admitted request, *reporting* it (shed_reason /
+        metrics counter) — shedding is load control, not silent loss."""
+        req.shed_step = int(now)
+        req.shed_reason = reason
+        self._shed.append(req)
+
+    def _deadline(self, req: Request) -> float:
+        d = req.deadline_s
+        if self.deadline_s is not None:
+            d = min(d, self.deadline_s)
+        return d
+
+    def _reprefill_or_shed(self, h: _Handoff, pending: List[Request],
+                           now: float, reason: str) -> None:
+        """Escalation ladder after a handoff gave up (retries exhausted or
+        payload corrupt): recompute the context from the prompt (front of
+        the prefill queue, preserving age order), bounded by
+        ``max_reprefills``; beyond that, shed.  The re-prefill replays the
+        request's sampling chain, so a recovered request's tokens are
+        bitwise-identical to the fault-free trace."""
+        n = self._reprefills.get(h.req.rid, 0)
+        if n >= self.max_reprefills:
+            self._shed_req(h.req, now, reason)
+            return
+        self._reprefills[h.req.rid] = n + 1
+        self.handoff_reprefills += 1
+        pending.insert(0, h.req)
 
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
-        """Replay a trace (same contract as ``ContinuousBatcher.run``)."""
+        """Replay a trace (same contract as ``ContinuousBatcher.run``).
+
+        Per tick: arrivals queue for prefill; deadline-expired
+        never-admitted requests are shed; the prefill pool (unless stalled
+        or backpressured by a full handoff queue) prefills up to
+        ``prefill_per_step`` prompts; free decode slots admit the oldest
+        *due* handoff (entries inside their retry-backoff window are
+        skipped, capacity rejects keep head-of-line order); the decode
+        pool (unless stalled) runs one step.  Failed or corrupt handoffs
+        walk the retry → re-prefill → shed ladder (bounded at every rung,
+        so ``run`` terminates at any fault rate)."""
         waiting = sorted(requests, key=lambda r: r.arrival_s)
         qi = 0
         now = 0.0
-        pending: List[Request] = []            # awaiting prefill
-        ready: List[Tuple[Request, int, KVBundle]] = []   # awaiting slot
+        pending: List[Request] = []   # awaiting prefill
+        ready: List[_Handoff] = []    # awaiting a decode slot
+        attempt_no: Dict[int, int] = {}   # rid -> transfer attempts, ever
+        prefill_no: Dict[int, int] = {}   # rid -> prefills, ever
         self._records = {}
         self.transfer_bytes = 0
         self.handoffs = 0
         self.peak_ready = 0
         self.peak_pending = 0
+        self.handoff_drops = self.handoff_retries = 0
+        self.handoff_corrupt = self.handoff_reprefills = 0
+        self.backpressure_steps = 0
+        self.prefill_stall_steps = self.decode_stall_steps = 0
+        self._shed = []
+        self._reprefills = {}
+        inj = self.injector
         decode = self.decode
         decode.reset_run_stats()
         self.prefill.reset_stats()
@@ -313,33 +440,88 @@ class DisaggCoordinator:
             while qi < len(waiting) and waiting[qi].arrival_s <= now:
                 pending.append(waiting[qi])
                 qi += 1
-            for _ in range(self.prefill_per_step):
-                if not pending:
-                    break
-                req = pending.pop(0)
-                tok, bundle = self.prefill.prefill(req)
-                rec = self._records.setdefault(
-                    req.rid, {"arrival": req.arrival_s})
-                rec["prefill_step"] = now
-                self.handoffs += 1
-                self.transfer_bytes += bundle.nbytes
-                ready.append((req, tok, bundle))
-            # handoff queue -> free decode slots, FIFO; a bundle that does
-            # not fit the paged pool right now stays queued (head-of-line:
-            # admitting out of order would starve the oldest context)
+            # deadline shedding: never-admitted requests only (a preempted
+            # decode context already emitted its first token — protected)
+            for r in [r for r in pending
+                      if now - r.arrival_s > self._deadline(r)]:
+                self._shed_req(r, now, "deadline")
+                pending.remove(r)
+            for h in [h for h in ready
+                      if now - h.req.arrival_s > self._deadline(h.req)]:
+                self._shed_req(h.req, now, "deadline")
+                ready.remove(h)
+            if inj is not None and inj.prefill_stalled(now):
+                self.prefill_stall_steps += 1
+            else:
+                for _ in range(self.prefill_per_step):
+                    if not pending:
+                        break
+                    if len(ready) >= self.max_ready:
+                        # bounded handoff queue: hold the prompt instead
+                        # of growing ready without bound
+                        self.backpressure_steps += 1
+                        break
+                    req = pending.pop(0)
+                    n = prefill_no.get(req.rid, 0)
+                    prefill_no[req.rid] = n + 1
+                    tok, bundle = self.prefill.prefill(req)
+                    if inj is not None and \
+                            inj.corrupt_handoff(req.rid, n):
+                        FaultInjector.corrupt_bundle(bundle)
+                    rec = self._records.setdefault(
+                        req.rid, {"arrival": req.arrival_s})
+                    rec["prefill_step"] = now
+                    self.handoffs += 1
+                    self.transfer_bytes += bundle.nbytes
+                    ready.append(_Handoff(req, tok, bundle, prefill_no=n))
+            # handoff queue -> free decode slots, FIFO among *due* entries
+            # (retry backoff defers an entry without starving the rest);
+            # a bundle that does not fit the paged pool right now stays
+            # queued (head-of-line: admitting out of order would starve
+            # the oldest context)
             for s in range(decode.slots):
-                if decode.active[s] is not None or not ready:
+                if decode.active[s] is not None:
                     continue
-                req, tok, bundle = ready[0]
-                if decode.admit_prefilled(s, req, bundle, tok, now):
-                    ready.pop(0)
-                    self._records[req.rid]["handoff_step"] = now
+                h = next((h for h in ready if h.next_try <= now), None)
+                if h is None:
+                    continue
+                a = attempt_no.get(h.req.rid, 0)
+                attempt_no[h.req.rid] = a + 1
+                if inj is not None and inj.drop_handoff(h.req.rid, a):
+                    # transfer attempt lost in flight
+                    self.handoff_drops += 1
+                    h.attempts += 1
+                    if h.attempts > self.max_handoff_retries:
+                        ready.remove(h)
+                        self._reprefill_or_shed(h, pending, now,
+                                                "handoff_failed")
+                    else:
+                        self.handoff_retries += 1
+                        h.next_try = now + self.retry_backoff * h.attempts
+                    continue
+                try:
+                    ok = decode.admit_prefilled(s, h.req, h.bundle,
+                                                h.tok, now)
+                except BundleIntegrityError:
+                    # splice-time checksum mismatch: the payload itself is
+                    # bad — retrying the same bundle can never succeed
+                    self.handoff_corrupt += 1
+                    ready.remove(h)
+                    self._reprefill_or_shed(h, pending, now,
+                                            "handoff_corrupt")
+                    continue
+                if ok:
+                    ready.remove(h)
+                    self._records[h.req.rid]["handoff_step"] = now
             self.peak_ready = max(self.peak_ready, len(ready))
             self.peak_pending = max(self.peak_pending, len(pending))
             if qi >= len(waiting) and not pending and not ready \
                     and all(a is None for a in decode.active):
                 break
-            decode.step(now)
+            if inj is not None and inj.decode_stalled(now):
+                self.decode_stall_steps += 1
+            else:
+                decode.step(now)
             # a preempted decode context lost its KV: route it back to the
             # prefill pool for recompute (front of queue, preserving the
             # eviction order — the colocated batcher's requeue-first rule)
@@ -407,7 +589,16 @@ class DisaggCoordinator:
             prefill_ar_bucket=self._prefill_bucket(),
             decode_ar_bucket=self._decode_bucket(),
             prefill_pool=self.prefill.stats(),
-            decode_pool=dm.to_dict())
+            decode_pool=dm.to_dict(),
+            handoff_drops=self.handoff_drops,
+            handoff_retries=self.handoff_retries,
+            handoff_corrupt=self.handoff_corrupt,
+            handoff_reprefills=self.handoff_reprefills,
+            shed_requests=len(self._shed),
+            backpressure_steps=self.backpressure_steps,
+            prefill_stall_steps=self.prefill_stall_steps,
+            decode_stall_steps=self.decode_stall_steps,
+            ready_cap=self.max_ready)
 
 
 __all__ = ["PrefillPool", "DisaggCoordinator", "DisaggMetrics",

@@ -205,11 +205,15 @@ class InferenceEngine:
                      "positions": jnp.asarray(positions),
                      "remaining": jnp.asarray(remaining),
                      "active": jnp.asarray(active)}
-            emitted, accepted, cache = self._spec(
+            emitted, accepted, finite, cache = self._spec(
                 self.params, cache, state, jnp.asarray(drafts),
                 self._step_rng())
             emitted = np.asarray(emitted)
             accepted = np.asarray(accepted)
+            # the engine has no quarantine/recompute machinery (that is
+            # the batcher's job) — fail loudly instead of emitting garbage
+            assert bool(np.asarray(finite)[np.asarray(active)].all()), \
+                "non-finite verify logits in batched generate"
             steps += 1
             for b in range(B):
                 if not active[b]:

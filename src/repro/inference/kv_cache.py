@@ -51,11 +51,19 @@ slots over dp axes — run one batcher per data-parallel replica.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 TRASH_BLOCK = 0
+
+
+class BundleIntegrityError(RuntimeError):
+    """A KV handoff bundle failed its content checksum at splice time —
+    the payload was damaged in flight.  The consumer must treat the
+    bundle as lost (retry the transfer or re-prefill); splicing it would
+    silently corrupt the request's downstream tokens."""
 
 
 @dataclasses.dataclass
@@ -135,6 +143,12 @@ class BlockAllocator:
     def can_allocate(self, slot: int, n_tokens: int) -> bool:
         need = self.blocks_for(n_tokens) - len(self._owned[slot])
         return need <= len(self._free)
+
+    def needs_growth(self, slot: int, n_tokens: int) -> bool:
+        """Would covering [0, n_tokens) require new blocks for ``slot``?
+        (The question an injected allocator-OOM burst gates on: growth
+        that is not actually needed can never fail.)"""
+        return self.blocks_for(n_tokens) > len(self._owned[slot])
 
     def stats(self) -> CacheStats:
         return CacheStats(
@@ -316,10 +330,17 @@ class KVBundle:
     token-identical to colocated serving: the decode pool continues the
     exact chain the prefill pool sampled the first token from.  ``None``
     for producers that never sample (e.g. raw :func:`export_slot`).
+    ``checksum``: cheap crc32 content checksum over the K/V payload plus
+    its shape/dtype, set by :meth:`seal` at the producer and verified by
+    :meth:`verify` at splice time (``ContinuousBatcher.admit_prefilled``)
+    — the end-to-end integrity check of the handoff transport.  ``None``
+    means unsealed (producers predating the robustness layer); verify is
+    then a no-op, so raw :func:`export_slot` bundles keep working.
     """
     k: np.ndarray
     v: np.ndarray
     rng: Optional[np.ndarray] = None
+    checksum: Optional[int] = None
 
     def __post_init__(self):
         assert self.k.shape == self.v.shape and self.k.ndim == 4, \
@@ -334,6 +355,27 @@ class KVBundle:
         """Transfer size of the handoff payload (K/V only; the 8-byte
         sampling key rides in the control plane)."""
         return int(self.k.nbytes + self.v.nbytes)
+
+    # -- integrity ---------------------------------------------------------
+
+    def _digest(self) -> int:
+        h = zlib.crc32(repr((self.k.shape, str(self.k.dtype))).encode())
+        h = zlib.crc32(np.ascontiguousarray(self.k).tobytes(), h)
+        h = zlib.crc32(np.ascontiguousarray(self.v).tobytes(), h)
+        return h
+
+    def seal(self) -> "KVBundle":
+        """Stamp the content checksum (producer side); returns self."""
+        self.checksum = self._digest()
+        return self
+
+    def verify(self) -> None:
+        """Raise :class:`BundleIntegrityError` when the payload does not
+        match the sealed checksum; no-op on unsealed bundles."""
+        if self.checksum is not None and self._digest() != self.checksum:
+            raise BundleIntegrityError(
+                f"KV bundle payload corrupt ({self.n_tokens} tokens, "
+                f"{self.nbytes} bytes): checksum mismatch")
 
 
 def slots_to_heads(arr: np.ndarray, kv_map) -> np.ndarray:
@@ -400,5 +442,6 @@ def export_slot(cache, slot: int, n_tokens: int, kv_map,
                     v=slots_to_heads(v, kv_map))
 
 
-__all__ = ["BlockAllocator", "CacheStats", "KVBundle", "paged_geometry",
-           "export_slot", "slots_to_heads", "heads_to_slots", "TRASH_BLOCK"]
+__all__ = ["BlockAllocator", "BundleIntegrityError", "CacheStats",
+           "KVBundle", "paged_geometry", "export_slot", "slots_to_heads",
+           "heads_to_slots", "TRASH_BLOCK"]

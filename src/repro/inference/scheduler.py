@@ -64,6 +64,7 @@ from ..core.pcontext import ParallelCtx, LOCAL
 from ..parallel.steps import (build_admit_chunk_step, build_admit_step,
                               build_cache_init, build_kv_splice_step,
                               build_serve_step, build_spec_verify_step)
+from .faults import FaultInjector
 from .kv_cache import (BlockAllocator, KVBundle, heads_to_slots,
                        paged_geometry)
 from .speculative import AdaptiveK, Drafter, make_drafter
@@ -75,6 +76,9 @@ class Request:
     prompt: np.ndarray           # (S,)
     max_new: int
     arrival_s: float = 0.0       # logical (step-clock) arrival
+    # TTFT deadline in logical steps from arrival (inf = none); expired
+    # never-admitted requests are shed, not served (DESIGN.md §11)
+    deadline_s: float = float("inf")
     # filled by the scheduler:
     first_token_s: float = -1.0  # wall-clock, relative to run() start
     done_s: float = -1.0         # wall-clock, relative to run() start
@@ -82,6 +86,11 @@ class Request:
     done_step: int = -1
     preempted: int = 0           # times evicted and recomputed
     output: Optional[np.ndarray] = None
+    # shed bookkeeping: a shed request's output stays None, but it is
+    # always *reported* (shed_reason set, counted in metrics) — the
+    # never-silently-dropped contract
+    shed_step: int = -1
+    shed_reason: Optional[str] = None
 
 
 def _percentile(xs, q):
@@ -185,6 +194,27 @@ class ServeMetrics:
     accepted_tokens_per_step: float = 0.0
     drafter_hit_rate: float = 0.0
     spec_k_mean: float = 0.0
+    # robustness (DESIGN.md §11; zeros on a fault-free run):
+    # * ``quarantines``       — slots evicted on non-finite logits and
+    #   recomputed through the preemption path (exact replay).
+    # * ``injected_oom``      — growths denied by an injected OOM burst
+    #   (the growing slot is evicted + requeued, not its neighbours).
+    # * ``shed_requests``     — deadline-expired requests dropped *before*
+    #   admission; reported (``shed_reason``), never silently lost.
+    # * ``spec_autodisables`` — slots whose speculative decoding was
+    #   degraded to plain decode (verify fault or acceptance collapse).
+    # * ``straggler_steps``   — steps carrying an injected wall-clock
+    #   delay (logical clock untouched: latency noise, not token change).
+    # * ``wasted_tokens``     — tokens decoded then discarded by an
+    #   eviction (preemption / OOM / quarantine) and re-decoded from
+    #   scratch; ``total / (total + wasted)`` is the useful-work goodput
+    #   fraction ``benchmarks/bench_faults.py`` gates on.
+    quarantines: int = 0
+    injected_oom: int = 0
+    shed_requests: int = 0
+    spec_autodisables: int = 0
+    straggler_steps: int = 0
+    wasted_tokens: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -203,7 +233,10 @@ class ContinuousBatcher:
                  spec_mode: Optional[str] = None, spec_k: int = 4,
                  spec_adaptive: bool = False,
                  draft_arch: str = "llama3.2-1b",
-                 drafter: Optional[Drafter] = None):
+                 drafter: Optional[Drafter] = None,
+                 injector: Optional[FaultInjector] = None,
+                 deadline_s: Optional[float] = None,
+                 spec_autodisable_after: int = 0):
         """``spec_mode`` turns on speculative decoding: each engine step
         drafts ``spec_k`` tokens per slot (``"ngram"`` prompt-lookup,
         ``"draft"`` small model from ``configs.registry`` via
@@ -213,7 +246,16 @@ class ContinuousBatcher:
         bitwise-identical to plain greedy decode; rejected-draft K/V is
         rolled back via ``BlockAllocator.truncate`` on the paged path.
         ``spec_adaptive`` walks k along {2,4,8}∩[1,spec_k] by acceptance
-        rate.  Dense (attention-only) families only."""
+        rate.  Dense (attention-only) families only.
+
+        Robustness knobs (DESIGN.md §11): ``injector`` is a
+        :class:`~repro.inference.faults.FaultInjector` consulted at the
+        step hooks (poison/OOM/straggler); ``deadline_s`` is a default
+        TTFT deadline in logical steps (per-request ``Request.deadline_s``
+        tightens it) — expired never-admitted requests are shed;
+        ``spec_autodisable_after`` > 0 degrades a slot to plain decode
+        after that many consecutive zero-accept verify passes (0 = off;
+        a verify-path fault always disables the slot's speculation)."""
         self.ap, self.cfg, self.params = ap, ap.cfg, params
         self.slots = slots
         self.s_max = s_max
@@ -318,6 +360,20 @@ class ContinuousBatcher:
         self._wall_run = 0.0     # wall seconds of the last run(), at drain
         self._peak_occupied = 0  # max sum of live positions, in tokens
         self._requeue: List[Request] = []   # preempted, awaiting re-admission
+        # -- robustness state (DESIGN.md §11) --------------------------------
+        self.injector = injector
+        self.deadline_s = deadline_s
+        self.spec_autodisable_after = spec_autodisable_after
+        self._quarantines = 0
+        self._injected_oom = 0
+        self._straggler_steps = 0
+        self._spec_autodisables = 0
+        self._shed: List[Request] = []      # shed this run (reported)
+        self._wasted_tokens = 0
+        self._oom_now = False               # injected burst, this step only
+        self._spec_deny: set = set()        # rids degraded to plain decode
+        self._spec_zero_acc = np.zeros((slots,), np.int64)
+        self._tainted: set = set()          # slots holding injected NaN
 
     # -- state/device sync ---------------------------------------------------
 
@@ -396,6 +452,7 @@ class ContinuousBatcher:
         self.active_mask[slot] = True
         if self.drafter is not None:
             self.drafter.reset(slot, list(req.prompt) + [nxt])
+        self._spec_zero_acc[slot] = 0   # collapse streak is per-occupant
         self._admit_seq[slot] = self._seq
         self._seq += 1
         self.outputs[req.rid] = [nxt]
@@ -422,7 +479,11 @@ class ContinuousBatcher:
         (canonical real-head layout, from another pool's prefill) into
         ``slot`` and activate the request with its already-sampled first
         token.  Returns False (no state change) when the paged pool cannot
-        hold the context right now — the coordinator keeps it queued."""
+        hold the context right now — the coordinator keeps it queued.
+        Raises :class:`~repro.inference.kv_cache.BundleIntegrityError`
+        (before any state change) when a sealed bundle's checksum does not
+        match — in-flight corruption; the coordinator re-prefills."""
+        bundle.verify()
         S = bundle.n_tokens
         if S + 1 > self.s_max:
             raise ValueError(f"handoff len {S} + 1 exceeds s_max="
@@ -457,7 +518,29 @@ class ContinuousBatcher:
             self._sync_table()
         self._dirty = True
 
-    # -- preemption ----------------------------------------------------------
+    # -- preemption / eviction ----------------------------------------------
+
+    def _evict(self, slot: int) -> None:
+        """Evict ``slot``'s request and requeue it for recompute-from-
+        scratch — shared by capacity preemption, injected-OOM bursts and
+        non-finite-logits quarantine.  The recompute replays the request's
+        stateless sampling chain, so its final tokens are bitwise-identical
+        to an uneventful run (``request_sampling_key``)."""
+        if slot in self._tainted:
+            self._scrub_slot(slot)
+        req = self.active[slot]
+        req.preempted += 1
+        self._wasted_tokens += len(self.outputs[req.rid])
+        del self.outputs[req.rid]
+        self.active[slot] = None
+        self.active_mask[slot] = False
+        self.remaining[slot] = 0
+        self._admit_seq[slot] = -1
+        if self.alloc is not None:
+            self.alloc.preempt(slot)
+            self._sync_table()
+        self._requeue.append(req)
+        self._dirty = True
 
     def _preempt_youngest(self) -> bool:
         """Evict the most recently admitted active request (vLLM-style
@@ -466,28 +549,78 @@ class ContinuousBatcher:
         live = [s for s in range(self.slots) if self.active_mask[s]]
         if not live:
             return False
-        victim = max(live, key=lambda s: self._admit_seq[s])
-        req = self.active[victim]
-        req.preempted += 1
-        del self.outputs[req.rid]
-        self.active[victim] = None
-        self.active_mask[victim] = False
-        self.remaining[victim] = 0
-        self._admit_seq[victim] = -1
-        self.alloc.preempt(victim)
-        self._sync_table()
-        self._requeue.append(req)
-        self._dirty = True
+        self._evict(max(live, key=lambda s: self._admit_seq[s]))
         return True
+
+    def _quarantine(self, slot: int) -> None:
+        """Non-finite logits in ``slot``: its emitted token this step is
+        garbage, so drop the step's output for the slot, evict it, and let
+        the requeue path recompute the request exactly (same machinery as
+        capacity preemption).  Under spec decode the slot's speculation is
+        also permanently degraded — a drafter feeding on poisoned history
+        is not trusted again."""
+        self._quarantines += 1
+        if self.spec_mode:
+            rid = self.active[slot].rid
+            if rid not in self._spec_deny:
+                self._spec_deny.add(rid)
+                self._spec_autodisables += 1
+        self._evict(slot)
+
+    def _poison_slot(self, slot: int) -> None:
+        """Injected fault: poke NaN into the slot's most recently written
+        K position, so the *device* step produces non-finite logits and
+        the ``finite`` guard must catch them.  Safe by the write-ordering
+        invariant: after quarantine + re-admission, every position up to
+        the new write frontier is overwritten before it is read again."""
+        p = max(int(self.positions[slot]) - 1, 0)
+        nan = jnp.asarray(jnp.nan, self.cache["k"].dtype)
+        if self.paged:
+            phys = int(self.alloc.table[slot, p // self.block_size])
+            off = p % self.block_size
+            self.cache["k"] = self.cache["k"].at[:, phys, off].set(nan)
+        else:
+            self.cache["k"] = self.cache["k"].at[:, slot, p].set(nan)
+        self._tainted.add(slot)
+
+    def _scrub_slot(self, slot: int) -> None:
+        """Zero a tainted slot's K/V storage before its blocks are freed.
+
+        The poisoned step itself writes NaN K *and* V at the then-current
+        position in every layer past the first (projections of the NaN
+        hidden state), and a masked attention lane still contributes
+        ``0 * NaN = NaN`` through the V-weighted sum — so without this
+        scrub a freed contaminated block re-poisons its next occupant at
+        positions past that occupant's write frontier.  Zeros are safe on
+        both sides of the mask: masked lanes contribute exactly 0 and
+        unmasked positions are rewritten before they are read (the same
+        write-ordering invariant recompute-from-scratch relies on)."""
+        if self.paged:
+            blocks = list(self.alloc.owned(slot))
+            if blocks:
+                idx = jnp.asarray(blocks, jnp.int32)
+                self.cache["k"] = self.cache["k"].at[:, idx].set(0)
+                self.cache["v"] = self.cache["v"].at[:, idx].set(0)
+        else:
+            self.cache["k"] = self.cache["k"].at[:, slot].set(0)
+            self.cache["v"] = self.cache["v"].at[:, slot].set(0)
+        self._tainted.discard(slot)
 
     def _ensure_growth(self, slot: int,
                        n_tokens: Optional[int] = None) -> None:
         """Pre-step invariant: blocks cover the next write position (or an
         explicit ``n_tokens`` target — the spec verify chunk's whole write
         range).  On OOM, preempt youngest-first until the growth fits (the
-        growing slot itself may be the victim)."""
+        growing slot itself may be the victim).  Under an injected OOM
+        burst any *real* growth is denied instead: the growing slot itself
+        is evicted (surgical — neighbours keep their blocks) and recomputed
+        once the burst passes."""
         if n_tokens is None:
             n_tokens = int(self.positions[slot]) + 1
+        if self._oom_now and self.alloc.needs_growth(slot, n_tokens):
+            self._injected_oom += 1
+            self._evict(slot)
+            return
         while not self.alloc.ensure(slot, n_tokens):
             victim_ok = self._preempt_youngest()
             if not self.active_mask[slot]:
@@ -497,6 +630,28 @@ class ContinuousBatcher:
                     "paged KV pool cannot hold a single request; "
                     "raise n_blocks")
         self._sync_table()
+
+    def _pre_step_faults(self, now: float) -> None:
+        """Consult the injector's decode-path hooks for this step: arm the
+        OOM burst (read by ``_ensure_growth``), poison any chosen live
+        slots, and apply the straggler's wall-clock delay (logical clock
+        untouched)."""
+        inj = self.injector
+        self._oom_now = False
+        if inj is None:
+            return
+        self._oom_now = inj.oom_burst(now)
+        for s in range(self.slots):
+            if not self.active_mask[s]:
+                continue
+            req = self.active[s]
+            if inj.poison_slot(req.rid, len(self.outputs[req.rid])):
+                self._poison_slot(s)
+        d = inj.straggle(now)
+        if d >= 0.0:
+            self._straggler_steps += 1
+            if d > 0.0:
+                time.sleep(d)
 
     # -- speculative decoding ------------------------------------------------
 
@@ -516,14 +671,29 @@ class ContinuousBatcher:
         one correction/bonus token (1..k+1 tokens), and truncate the
         rejected tail's blocks back to the pool.  The host slot state is
         authoritative (variable per-slot advance), re-pushed every step.
+
+        Degraded mode: slots whose rid is in ``_spec_deny`` (verify-path
+        fault, or ``spec_autodisable_after`` consecutive zero-accept
+        passes) draft nothing and take at most the correction token —
+        per-slot plain decode riding the same verify executable, still
+        emitting exact target-model tokens.  If *every* active slot is
+        denied the whole step falls back to the plain executable.
         """
         if not self.active_mask.any():
             return
+        self._pre_step_faults(now)
+        if not self.active_mask.any():   # faults evicted every slot
+            return
+        denied = np.array([self.active_mask[s]
+                           and self.active[s].rid in self._spec_deny
+                           for s in range(self.slots)])
+        if denied[self.active_mask].all():
+            return self._plain_step(now, faults_done=True)
         k = self._speck.k if self._speck is not None else self.spec_k
         C = k + 1
         drafts = np.zeros((self.slots, k), np.int32)
         for s in range(self.slots):
-            if self.active_mask[s]:
+            if self.active_mask[s] and not denied[s]:
                 # clamp: a cross-vocabulary drafter must still propose
                 # valid target ids (bad ids would just be rejected anyway)
                 drafts[s] = np.clip(self.drafter.draft(s, k), 0,
@@ -546,17 +716,21 @@ class ContinuousBatcher:
         # draws from the step-level rng, not the per-slot chains)
         spec_state = {k2: self._state[k2] for k2 in
                       ("tokens", "positions", "remaining", "active")}
-        emitted, accepted, self.cache = self._spec_fn(k)(
+        emitted, accepted, finite, self.cache = self._spec_fn(k)(
             self.params, self.cache, spec_state, jnp.asarray(drafts),
             self._step_rng())
         emitted = np.asarray(emitted)
         accepted = np.asarray(accepted)
+        finite = np.asarray(finite)
         self.steps_run += 1
         self._spec_steps += 1
         self._spec_k_sum += k
         n_active = acc_sum = 0
         for s in range(self.slots):
             if not was_active[s]:
+                continue
+            if not finite[s]:
+                self._quarantine(s)
                 continue
             a = int(accepted[s])
             # cap by the request budget and the cache capacity — exactly
@@ -566,16 +740,28 @@ class ContinuousBatcher:
             # last in-bounds position) before its done check fires.
             take = min(a + 1, int(self.remaining[s]),
                        max(self.s_max - 1 - int(self.positions[s]), 1))
+            if denied[s]:
+                take = min(take, 1)   # degraded: correction token only
             toks = [int(t) for t in emitted[s, :take]]
             self.outputs[self.active[s].rid].extend(toks)
-            self.drafter.observe(s, toks)
             self.tokens[s] = toks[-1]
             self.positions[s] += take
             self.remaining[s] -= take
-            n_active += 1
-            acc_sum += a
-            self._spec_drafted += k
-            self._spec_accepted += a
+            if not denied[s]:
+                self.drafter.observe(s, toks)
+                n_active += 1
+                acc_sum += a
+                self._spec_drafted += k
+                self._spec_accepted += a
+                if self.spec_autodisable_after > 0:
+                    # acceptance collapse: N consecutive all-reject passes
+                    # mean drafting is pure overhead for this slot
+                    self._spec_zero_acc[s] = 0 if a else \
+                        self._spec_zero_acc[s] + 1
+                    if self._spec_zero_acc[s] >= \
+                            self.spec_autodisable_after:
+                        self._spec_deny.add(self.active[s].rid)
+                        self._spec_autodisables += 1
             if self.alloc is not None:
                 # KV rollback: blocks holding only rejected-draft writes
                 # go back to the pool
@@ -596,8 +782,17 @@ class ContinuousBatcher:
         """One decode step over all slots (no-op when none active)."""
         if self.spec_mode:
             return self._spec_step(now)
+        return self._plain_step(now)
+
+    def _plain_step(self, now: float, faults_done: bool = False):
+        """One plain decode step (``faults_done``: the spec path already
+        ran this step's fault hooks before falling back here)."""
         if not self.active_mask.any():
             return
+        if not faults_done:
+            self._pre_step_faults(now)
+            if not self.active_mask.any():   # faults evicted every slot
+                return
         if self.alloc is not None:
             for s in range(self.slots):
                 # growth only at block boundaries: next write position is
@@ -605,19 +800,27 @@ class ContinuousBatcher:
                 if self.active_mask[s] \
                         and self.positions[s] % self.block_size == 0:
                     self._ensure_growth(s)
+            if not self.active_mask.any():   # OOM burst evicted them all
+                return
         occ = int(self.positions[self.active_mask].sum()) + \
             int(self.active_mask.sum())
         self._peak_occupied = max(self._peak_occupied, occ)
         if self._dirty:
             self._push_state()
         was_active = self.active_mask.copy()
-        emitted, done, self._state, self.cache = self._serve(
+        emitted, done, finite, self._state, self.cache = self._serve(
             self.params, self.cache, self._state)
         emitted = np.asarray(emitted)
         done = np.asarray(done)
+        finite = np.asarray(finite)
         self.steps_run += 1
         for s in range(self.slots):
             if not was_active[s]:
+                continue
+            if not finite[s]:
+                # drop this step's garbage token and recompute the whole
+                # request through the preemption path — exact replay
+                self._quarantine(s)
                 continue
             self.outputs[self.active[s].rid].append(int(emitted[s]))
             self.tokens[s] = emitted[s]
@@ -642,23 +845,61 @@ class ContinuousBatcher:
         self.outputs = {}
         self._spec_steps = self._spec_drafted = 0
         self._spec_accepted = self._spec_k_sum = 0
+        self._quarantines = self._injected_oom = 0
+        self._straggler_steps = self._spec_autodisables = 0
+        self._wasted_tokens = 0
+        self._shed = []
+        self._spec_deny = set()
+        self._spec_zero_acc[:] = 0
+        self._tainted = set()
+        if self.injector is not None:
+            self.injector.reset_stats()
         if self.drafter is not None:
             self.drafter.calls = self.drafter.hits = 0
         if self.alloc is not None:
             self.alloc.reset_stats()
         self._wall0 = time.perf_counter()
 
+    def _shed_req(self, req: Request, now: float, reason: str) -> None:
+        """Drop a never-admitted request, *reporting* it (shed_reason /
+        metrics counter) — shedding is load control, not silent loss."""
+        req.shed_step = int(now)
+        req.shed_reason = reason
+        self._shed.append(req)
+
+    def _deadline(self, req: Request) -> float:
+        """Effective TTFT deadline (logical steps): the tighter of the
+        request's own and the batcher default."""
+        d = req.deadline_s
+        if self.deadline_s is not None:
+            d = min(d, self.deadline_s)
+        return d
+
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
-        """Replay a trace (requests sorted by arrival) to completion."""
+        """Replay a trace (requests sorted by arrival) to completion.
+
+        Deadline shedding: a request still waiting for *first* admission
+        past its effective deadline (:meth:`_deadline`) is shed instead of
+        served.  Preempted requests are never shed — their first token was
+        already promised and the recompute replays it exactly."""
         waiting = sorted(requests, key=lambda r: r.arrival_s)
         qi = 0
         now = 0.0
+        arrived: List[Request] = []   # due, never admitted
         if not self.active_mask.any() and not self._requeue:
             # fresh replay on a drained batcher
             self.reset_run_stats()
         self._wall0 = time.perf_counter()
         for _ in range(max_steps):
+            while qi < len(waiting) and waiting[qi].arrival_s <= now:
+                arrived.append(waiting[qi])
+                qi += 1
+            expired = [r for r in arrived
+                       if now - r.arrival_s > self._deadline(r)]
+            for r in expired:
+                self._shed_req(r, now, "deadline")
+                arrived.remove(r)
             # admit preempted requests first, then due arrivals
             for s in range(self.slots):
                 if self.active[s] is not None:
@@ -667,10 +908,10 @@ class ContinuousBatcher:
                     if self._admit(s, self._requeue[0], now):
                         self._requeue.pop(0)
                     continue
-                if qi < len(waiting) and waiting[qi].arrival_s <= now:
-                    if self._admit(s, waiting[qi], now):
-                        qi += 1
-            if qi >= len(waiting) and not self._requeue \
+                if arrived:
+                    if self._admit(s, arrived[0], now):
+                        arrived.pop(0)
+            if qi >= len(waiting) and not arrived and not self._requeue \
                     and all(a is None for a in self.active):
                 break
             self.step(now)
@@ -744,7 +985,13 @@ class ContinuousBatcher:
             drafter_hit_rate=self.drafter.hit_rate
             if self.drafter is not None else 0.0,
             spec_k_mean=self._spec_k_sum / self._spec_steps
-            if self._spec_steps else 0.0)
+            if self._spec_steps else 0.0,
+            quarantines=self._quarantines,
+            injected_oom=self._injected_oom,
+            shed_requests=len(self._shed),
+            spec_autodisables=self._spec_autodisables,
+            straggler_steps=self._straggler_steps,
+            wasted_tokens=self._wasted_tokens)
 
 
 def make_trace(n_requests: int, *, mean_in: int, mean_out: int,

@@ -33,6 +33,17 @@ Drafters (``make_drafter``):
 All drafters are deterministic (a delta proposal distribution), which is
 what makes the sampled-mode rejection rule in ``_spec_targets`` exact.
 
+Degraded mode (DESIGN.md §11): the batcher can disable speculation
+*per slot* at runtime — permanently after a verify-path fault
+(non-finite logits quarantine: a drafter fed on poisoned history is not
+trusted again), or on acceptance collapse when
+``ContinuousBatcher(spec_autodisable_after=N)`` sees N consecutive
+zero-accept verify passes.  A denied slot drafts nothing and takes only
+the correction token from the shared verify pass — per-slot plain decode
+emitting exact target-model tokens; when every active slot is denied the
+whole step falls back to the plain executable.  Drafters themselves need
+no fault handling: they are proposal distributions, never correctness.
+
 Known gaps: the verify pass rides the chunked-prefill path and is
 therefore dense-family-only, and the draft model runs local/replicated
 (not mesh-sharded) — it is tiny relative to the target by construction.

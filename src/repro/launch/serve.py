@@ -42,7 +42,40 @@ from ..core.pcontext import (ParallelCtx, LOCAL, AR_STRATEGIES,
                              SEQ_PARALLEL_MODES)
 from ..models.transformer import make_plan, init_params
 from ..inference.engine import InferenceEngine
+from ..inference.faults import FaultInjector, FaultPlan
 from ..inference.scheduler import ContinuousBatcher, make_trace
+
+
+def _make_injector(fault_plan):
+    """``--fault-plan`` -> FaultInjector (None when absent): a ``k=v,...``
+    string or a JSON file path (``FaultPlan.parse``)."""
+    if fault_plan is None:
+        return None
+    return FaultInjector(FaultPlan.parse(fault_plan))
+
+
+def _check_outcomes(done, injector, deadline_ms):
+    """The never-silently-dropped contract: on a fault-free run with no
+    deadline every request must complete; under faults/deadlines each
+    request either completed or was shed *with a reason*."""
+    if injector is None and deadline_ms is None:
+        assert all(r.output is not None for r in done), "requests dropped!"
+    else:
+        lost = [r.rid for r in done
+                if r.output is None and r.shed_reason is None]
+        assert not lost, f"requests silently dropped: {lost}"
+
+
+def _print_faults(m, injector, shed):
+    """One summary line for the robustness counters (trace modes)."""
+    if injector is not None:
+        fired = {k: v for k, v in injector.stats().items() if v}
+        print(f"[serve]   faults injected: {fired or 'none'}")
+    if shed:
+        reasons: dict = {}
+        for r in shed:
+            reasons[r.shed_reason] = reasons.get(r.shed_reason, 0) + 1
+        print(f"[serve]   shed {len(shed)} request(s): {reasons}")
 
 
 def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool,
@@ -121,7 +154,8 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
               admit_mode: str = "full", admit_chunk: int = 32,
               mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
               spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
-              draft_arch: str = "llama3.2-1b", json_out=None):
+              draft_arch: str = "llama3.2-1b", json_out=None,
+              fault_plan=None, deadline_ms=None):
     cfg = get_smoke(arch) if smoke else get_config(arch)
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
@@ -129,17 +163,19 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
                                   seq_parallel)
     ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
+    injector = _make_injector(fault_plan)
     sched = ContinuousBatcher(
         ap, params, slots=slots, s_max=s_max, ctx=ctx, mesh=mesh,
         block_size=block_size, n_blocks=n_blocks, ar_table=ar_table,
         temperature=temperature, top_k=top_k, seed=seed,
         admit_mode=admit_mode, admit_chunk=admit_chunk,
         spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
-        draft_arch=draft_arch)
+        draft_arch=draft_arch, injector=injector,
+        deadline_s=deadline_ms)   # 1 logical step = 1 ms (deterministic)
     reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
                       rate=rate, vocab=cfg.vocab_size, seed=seed)
     done = sched.run(reqs)
-    assert all(r.output is not None for r in done), "requests dropped!"
+    _check_outcomes(done, injector, deadline_ms)
     m = sched.metrics(done)
     layout = f"paged(bs={block_size})" if sched.paged else "dense"
     print(f"[serve] trace {arch} [{layout} ar={ar_strategy} tp={tp}"
@@ -164,6 +200,11 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
               f"{m.accepted_tokens_per_step:.2f} accepted/step over "
               f"{m.spec_steps} verify steps, drafter hit rate "
               f"{m.drafter_hit_rate:.2f}")
+    if injector is not None or m.shed_requests:
+        print(f"[serve]   robustness: {m.quarantines} quarantines, "
+              f"{m.injected_oom} injected OOM, {m.straggler_steps} "
+              f"straggler steps, {m.spec_autodisables} spec autodisables")
+        _print_faults(m, injector, sched._shed)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(m.to_dict(), f, indent=2, default=float)
@@ -183,10 +224,14 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
                mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
                prefill_per_step: int = 1,
                spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
-               draft_arch: str = "llama3.2-1b", json_out=None):
+               draft_arch: str = "llama3.2-1b", json_out=None,
+               fault_plan=None, deadline_ms=None):
     """Disaggregated trace serving: prefill pool + decode pool, each with
     its own mesh layout and AR dispatch table (DESIGN.md §9).
-    ``ar_table`` seeds BOTH pools when a per-pool table is not given."""
+    ``ar_table`` seeds BOTH pools when a per-pool table is not given.
+    ``fault_plan`` / ``deadline_ms`` arm the robustness layer: one
+    injector drives both the coordinator's handoff hooks and the decode
+    batcher's step hooks (DESIGN.md §11; 1 logical step = 1 ms)."""
     from ..inference.disagg import (DisaggCoordinator, PrefillPool,
                                     pool_tuner)
     prefill_ar_table = prefill_ar_table or ar_table
@@ -211,18 +256,21 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
                        ar_table=tuner_p, temperature=temperature,
                        top_k=top_k, seed=seed, admit_mode=admit_mode,
                        admit_chunk=admit_chunk, block_size=block_size)
+    injector = _make_injector(fault_plan)
     decode = ContinuousBatcher(
         ap_d, params_d, slots=slots, s_max=s_max, ctx=ctx_d, mesh=mesh_d,
         block_size=block_size, n_blocks=n_blocks, ar_table=tuner_d,
         temperature=temperature, top_k=top_k, seed=seed,
         spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
-        draft_arch=draft_arch)
+        draft_arch=draft_arch, injector=injector)
     coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d,
-                              prefill_per_step=prefill_per_step)
+                              prefill_per_step=prefill_per_step,
+                              injector=injector,
+                              deadline_s=deadline_ms)  # 1 step = 1 ms
     reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
                       rate=rate, vocab=cfg.vocab_size, seed=seed)
     done = coord.run(reqs)
-    assert all(r.output is not None for r in done), "requests dropped!"
+    _check_outcomes(done, injector, deadline_ms)
     m = coord.metrics(done)
     layout = f"paged(bs={block_size})" if decode.paged else "dense"
     spec = f" spec={spec_mode}(k={spec_k})" if spec_mode else ""
@@ -245,6 +293,14 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
           f"vs decode pool 2^{m.decode_ar_bucket} "
           f"(prefill {m.prefill_pool['ar_buckets_analytic']} analytic, "
           f"{m.prefill_pool['ar_buckets_dispatched']} dispatched)")
+    if injector is not None or m.shed_requests:
+        print(f"[serve]   robustness: {m.handoff_drops} drops / "
+              f"{m.handoff_retries} retries / {m.handoff_corrupt} corrupt "
+              f"/ {m.handoff_reprefills} re-prefills, "
+              f"{m.backpressure_steps} backpressure steps "
+              f"(ready cap {m.ready_cap}), stalls prefill="
+              f"{m.prefill_stall_steps} decode={m.decode_stall_steps}")
+        _print_faults(m, injector, coord._shed + decode._shed)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(m.to_dict(), f, indent=2, default=float)
@@ -323,6 +379,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="persisted autotune table for the decode pool")
     p.add_argument("--prefill-per-step", type=int, default=1,
                    help="prompts the prefill pool admits per logical step")
+    # -- robustness / fault injection (trace modes) ----------------------
+    p.add_argument("--fault-plan", default=None,
+                   help="deterministic fault plan: 'key=rate,...' string "
+                        "or JSON file (see docs/robustness.md); e.g. "
+                        "'seed=7,handoff_drop=0.1,nan_logits=0.02'")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="TTFT deadline; 1 logical step = 1 ms, so this "
+                        "is a deterministic step budget — expired "
+                        "never-admitted requests are shed (reported, "
+                        "never silent)")
     return p
 
 
@@ -332,6 +398,10 @@ def main(argv=None):
     if args.mode == "batch" and args.spec_adaptive:
         raise SystemExit("--spec-adaptive is trace-mode only (the engine "
                          "runs a fixed --spec-k)")
+    if args.mode == "batch" and (args.fault_plan or
+                                 args.deadline_ms is not None):
+        raise SystemExit("--fault-plan/--deadline-ms are trace-mode only "
+                         "(the batch engine has no recovery machinery)")
     if args.disagg:
         if args.mode != "trace":
             raise SystemExit("--disagg is trace-mode only")
@@ -351,7 +421,9 @@ def main(argv=None):
                    prefill_per_step=args.prefill_per_step,
                    spec_mode=spec_mode, spec_k=args.spec_k,
                    spec_adaptive=args.spec_adaptive,
-                   draft_arch=args.draft_arch, json_out=args.json_out)
+                   draft_arch=args.draft_arch, json_out=args.json_out,
+                   fault_plan=args.fault_plan,
+                   deadline_ms=args.deadline_ms)
         return 0
     if args.mode == "batch":
         run_batch(args.arch, smoke=args.smoke, batch=args.batch,
@@ -375,7 +447,9 @@ def main(argv=None):
                   admit_chunk=args.admit_chunk, rate=args.rate,
                   spec_mode=spec_mode, spec_k=args.spec_k,
                   spec_adaptive=args.spec_adaptive,
-                  draft_arch=args.draft_arch, json_out=args.json_out)
+                  draft_arch=args.draft_arch, json_out=args.json_out,
+                  fault_plan=args.fault_plan,
+                  deadline_ms=args.deadline_ms)
     return 0
 
 

@@ -454,6 +454,24 @@ def _sample_next(logits, serve_ctx: ParallelCtx, cfg, rng,
     return L.greedy_sample(logits, serve_ctx, cfg.vocab_size)
 
 
+def _finite_slots(logits, serve_ctx: ParallelCtx):
+    """Per-slot all-finite flag over (possibly vocab-sharded) logits.
+
+    ``logits``: (..., slots leading, vocab last).  Non-finite counts are
+    psum'd over the TP axes so the flag is *replicated* across shards —
+    a NaN on any vocab shard marks the slot on every device (relying on
+    NaN propagation to make shards agree independently would be
+    replication-unsound).  This is the device half of the batcher's
+    quarantine guard (DESIGN.md §11): detection happens where the
+    corruption lives, the host only reads one bool per slot.
+    """
+    bad = (~jnp.isfinite(logits.astype(jnp.float32)))
+    bad = bad.sum(axis=tuple(range(1, bad.ndim))).astype(jnp.int32)
+    if serve_ctx.has_tp:
+        bad = lax.psum(bad, serve_ctx.tp_axes)
+    return bad == 0
+
+
 def _sample_next_slots(logits, serve_ctx: ParallelCtx, cfg, keys, idx,
                        temperature: float, top_k: int):
     """Per-slot next-token sampling for the fused serve step.
@@ -512,10 +530,14 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
     """Fused continuous-batching step: decode all slots + sample + advance
     the device-side slot state.
 
-    (params, cache, state) -> (emitted, done, state', cache') with
-    state = {tokens, positions, remaining: (slots,) i32, active: (slots,)
-    bool, rng: (slots, 2) u32 per-request sampling-chain base keys,
-    sample_idx: (slots,) i32 tokens sampled so far}.  Slot ``s`` samples
+    (params, cache, state) -> (emitted, done, finite, state', cache')
+    with state = {tokens, positions, remaining: (slots,) i32, active:
+    (slots,) bool, rng: (slots, 2) u32 per-request sampling-chain base
+    keys, sample_idx: (slots,) i32 tokens sampled so far}.  ``finite``
+    is the per-slot all-finite-logits flag (``_finite_slots``): a False
+    entry means the slot's token this step is garbage — the batcher
+    quarantines the slot and recomputes it (DESIGN.md §11) instead of
+    emitting.  Slot ``s`` samples
     with ``fold_in(rng[s], sample_idx[s])`` — the request's own chain, so
     sampled streams are schedule-independent (see ``_sample_next_slots``).
     Inactive slots keep decoding into their own (dense) row or the
@@ -543,6 +565,7 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                 attn_chunk=attn_chunk)
         nxt = _sample_next_slots(logits, serve_ctx, cfg, state["rng"],
                                  state["sample_idx"], temperature, top_k)
+        finite = _finite_slots(logits, serve_ctx)
         emitted = jnp.where(active, nxt, state["tokens"])
         act_i = active.astype(jnp.int32)
         positions = state["positions"] + act_i
@@ -552,7 +575,7 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                   "remaining": remaining, "active": active & ~done,
                   "rng": state["rng"],
                   "sample_idx": state["sample_idx"] + act_i}
-        return emitted, done, state2, new_cache
+        return emitted, done, finite, state2, new_cache
 
     if mesh is None:
         return BuiltStep(fn=step, in_specs=None, out_specs=None, mesh=None,
@@ -565,7 +588,7 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
              "remaining": P(None), "active": P(None),
              "rng": P(None, None), "sample_idx": P(None)}
     in_specs = (pspecs, cspecs, sspec)
-    out_specs = (P(None), P(None), sspec, cspecs)
+    out_specs = (P(None), P(None), P(None), sspec, cspecs)
     fn = shard_map(step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_vma=False)
     return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,
@@ -633,7 +656,10 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
     every slot in ONE fused pass over the chunked-prefill machinery.
 
     (params, cache, state, drafts (slots, k), rng) ->
-    (emitted (slots, k+1), accepted (slots,) i32, cache').
+    (emitted (slots, k+1), accepted (slots,) i32, finite (slots,) bool,
+    cache').  ``finite`` flags slots whose verify logits were all finite
+    (``_finite_slots``); a False slot's emitted/accepted are garbage and
+    the batcher quarantines it (DESIGN.md §11).
 
     The chunk input for each slot is ``[state.tokens, drafts]`` (C = k+1
     tokens) written/attended at positions ``state.positions + [0..k]`` —
@@ -677,6 +703,7 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
                 params, cache, x, pos, ap, serve_ctx,
                 scan_layers=scan_layers, layer_map=layer_map,
                 attn_chunk=attn_chunk, return_logits=True)
+        finite = _finite_slots(logits, serve_ctx)
         tgt, match = _spec_targets(logits, drafts, serve_ctx, cfg, rng,
                                    temperature, top_k)
         prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)    # (B, k)
@@ -687,7 +714,7 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
         # bonus.  Greedy drafts equal tgt where accepted, so either branch
         # is the plain greedy token there.
         emitted = jnp.where(idx < accepted[:, None], drafts_pad, tgt)
-        return emitted, accepted.astype(jnp.int32), cache2
+        return emitted, accepted.astype(jnp.int32), finite, cache2
 
     if mesh is None:
         return BuiltStep(fn=verify, in_specs=None, out_specs=None,
@@ -699,7 +726,7 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
     sspec = {"tokens": P(None), "positions": P(None),
              "remaining": P(None), "active": P(None)}
     in_specs = (pspecs, cspecs, sspec, P(None, None), P(None))
-    out_specs = (P(None, None), P(None), cspecs)
+    out_specs = (P(None, None), P(None), P(None), cspecs)
     fn = shard_map(verify, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_vma=False)
     return BuiltStep(fn=fn, in_specs=in_specs, out_specs=out_specs,

@@ -55,3 +55,9 @@ def test_train_parity(dist_runner):
 def test_elastic_restart(dist_runner):
     out = dist_runner("case_elastic.py")
     assert "elastic OK" in out
+
+
+@pytest.mark.dist
+def test_faults_injected(dist_runner):
+    out = dist_runner("case_faults.py")
+    assert "faults OK" in out
