@@ -21,7 +21,10 @@ What is compared (chosen to be meaningful on shared CI runners):
   slack floor on top of the relative threshold.  The RS+AG ``sp_rows``
   are additionally gated on their HLO-structural / analytic fields
   (per-collective wire-byte ratio, collective count, SP-vs-fused
-  dispatch) which are deterministic on any runner.
+  dispatch) which are deterministic on any runner.  The quantized-wire
+  ``quant_rows`` are gated the same way (wire bytes, collective count,
+  wire-reduction factor, analytic ``ar_quant="auto"`` level per bucket)
+  while their CPU latency columns stay ungated.
 * ``BENCH_serve.json`` — the trace-replay **logical-step** metrics
   (TTFT/TPOT p50/p99 in steps, step counts, emitted tokens, peak KV
   footprint).  These are deterministic given the seeded trace, so any
@@ -64,6 +67,11 @@ DISAGG_FIELDS = ("steps", "total_new_tokens", "completed", "preemptions",
 # (rs_ag_us / fused_flat_us) are deliberately ungated (CPU jitter).
 SP_FIELDS = ("per_coll_ratio", "auto_sp", "fused_per_coll_wire_bytes",
              "rs_ag_per_coll_wire_bytes", "rs_ag_collectives")
+# Quantized-wire rows of BENCH_allreduce.json: HLO wire accounting and
+# the analytic ar_quant="auto" level per bucket are deterministic on any
+# runner; the latency columns (q_us / fp_us) are deliberately ungated.
+QUANT_FIELDS = ("wire_reduction", "q_wire_bytes", "fp_wire_bytes",
+                "q_collectives", "auto_bits")
 # Fault-injected cells: the schedule is a pure hash of (seed, kind, ids),
 # so every counter below is deterministic on any runner.
 FAULT_FIELDS = ("goodput_frac", "goodput_tok_per_step", "ttft_steps_p99",
@@ -153,6 +161,16 @@ def check_allreduce(base: Dict, fresh: Dict, threshold: float,
             _check_rows(base["sp_rows"], fresh["sp_rows"],
                         lambda r: r.get("msg_bytes"), SP_FIELDS,
                         threshold, "allreduce.sp", failures)
+    # Quantized-wire structural rows: a compression or dispatch change
+    # that shrinks the wire win (or flips an auto bucket) must show here.
+    if base.get("quant_rows"):
+        if not fresh.get("quant_rows"):
+            failures.append("allreduce: fresh JSON lost 'quant_rows'")
+        else:
+            _check_rows(base["quant_rows"], fresh["quant_rows"],
+                        lambda r: (r.get("msg_bytes"), r.get("quant")),
+                        QUANT_FIELDS, threshold, "allreduce.quant",
+                        failures)
 
 
 def main(argv=None) -> int:

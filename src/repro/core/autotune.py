@@ -43,6 +43,10 @@ from . import comm_model as cm
 # Strategies the dispatcher may pick from (ParallelCtx.ar_strategy values).
 DISPATCHABLE = ("flat", "hier_ring", "hier_rd", "hier_rd_halving")
 
+# Wire-quantization levels a table entry may carry (ParallelCtx.ar_quant
+# values minus "auto"; kept literal to avoid an import knot with pcontext).
+QUANT_LEVELS = ("none", "int8", "int4")
+
 # Persisted-table schema version (``to_json``); bump on incompatible
 # layout changes.  ``load`` treats an unknown version as a corrupt table
 # and degrades to analytic seeding rather than guessing.
@@ -62,12 +66,21 @@ class ARChoice:
     strategy: str                 # one of DISPATCHABLE
     rd_chunks: int = 1            # slow-axis pipeline chunks (hier_rd only)
     compress_slow: bool = False   # int8-compress the slow exchange (lossy)
+    quant: str = "none"           # wire quantization level (QUANT_LEVELS)
 
     def apply(self, ctx):
-        """Concretize a ctx whose ar_strategy is 'auto' with this choice."""
-        return ctx.replace(ar_strategy=self.strategy,
-                           rd_chunks=self.rd_chunks,
-                           compress_slow=self.compress_slow)
+        """Concretize a ctx whose ar_strategy is 'auto' with this choice.
+
+        ``quant`` is written back only when the ctx asked for
+        ``ar_quant="auto"`` — a forced level (or "none") is the caller's
+        decision and must survive dispatch.  Both fields go through one
+        ``replace`` so the ctx validator never sees the half-resolved
+        state (ar_quant='auto' with a concrete strategy)."""
+        kw = dict(ar_strategy=self.strategy, rd_chunks=self.rd_chunks,
+                  compress_slow=self.compress_slow)
+        if getattr(ctx, "ar_quant", "none") == "auto":
+            kw["ar_quant"] = self.quant
+        return ctx.replace(**kw)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +186,55 @@ def analytic_choice(msg_bytes: float, fast_size: int, slow_size: int,
                     compress_slow=compress)
 
 
+def predict_quant_times(msg_bytes: float, fast_size: int, slow_size: int,
+                        net: cm.NetworkSpec) -> Dict[str, float]:
+    """Predicted seconds per wire-quantization level.
+
+    ``none`` is the best full-precision strategy at this size; int8/int4
+    run the quantized hierarchical path (packed RS + quantized RD inter +
+    packed AG) whose bandwidth terms shrink by the wire factor while its
+    latency terms — and per-phase pack overhead — do not.  That asymmetry
+    is the whole point: quantization wins only past the crossover where
+    the transfer is bandwidth-bound (paper Sec. 4.3 frame, Flash-
+    Communication payload model)."""
+    t_none = min(predict_times(msg_bytes, fast_size, slow_size, net)
+                 .values())
+    return {
+        "none": t_none,
+        "int8": cm.t_quant_hier_allreduce(msg_bytes, slow_size, fast_size,
+                                          net, 8),
+        "int4": cm.t_quant_hier_allreduce(msg_bytes, slow_size, fast_size,
+                                          net, 4),
+    }
+
+
+def analytic_quant_choice(msg_bytes: float, fast_size: int, slow_size: int,
+                          net: cm.NetworkSpec, mode: str) -> ARChoice:
+    """Dispatch entry for a quant-aware call site (``mode`` != "none").
+
+    Forced modes ("int8"/"int4") always quantize — the user overrode the
+    accuracy tradeoff — and route through hier_rd when a slow axis
+    exists, since that is the topology the quantized path implements.
+    ``"auto"`` climbs an accuracy ladder: each lossier level must beat
+    the previous by >10% predicted time to be worth its extra error, so
+    the lossless choice wins ties and int4 only appears where bandwidth
+    savings are decisive."""
+    base = analytic_choice(msg_bytes, fast_size, slow_size, net)
+    if mode in ("int8", "int4"):
+        strat = "hier_rd" if slow_size > 1 else base.strategy
+        return ARChoice(strategy=strat, rd_chunks=1, quant=mode)
+    t = predict_quant_times(msg_bytes, fast_size, slow_size, net)
+    quant = "none"
+    if t["int8"] < 0.9 * t["none"]:
+        quant = "int8"
+        if t["int4"] < 0.9 * t["int8"]:
+            quant = "int4"
+    if quant == "none":
+        return base
+    strat = "hier_rd" if slow_size > 1 else base.strategy
+    return ARChoice(strategy=strat, rd_chunks=1, quant=quant)
+
+
 # ---------------------------------------------------------------------------
 # Dispatch table
 # ---------------------------------------------------------------------------
@@ -215,6 +277,7 @@ def _parse_key(key: str) -> Tuple[int, int, int, str]:
 class _Measurement:
     strategy: str
     seconds: float
+    quant: str = "none"
 
 
 class AutoTuner:
@@ -246,15 +309,26 @@ class AutoTuner:
     # -- lookup ------------------------------------------------------------
 
     def choose(self, msg_bytes: int, fast_size: int, slow_size: int,
-               dtype: str = "bfloat16") -> ARChoice:
-        key = _key(msg_bytes, fast_size, slow_size, dtype)
+               dtype: str = "bfloat16", quant: str = "none") -> ARChoice:
+        """Dispatch one call site.  ``quant`` is the ctx's ar_quant policy:
+        "none" keys and seeds exactly as before (old persisted tables stay
+        valid); any other policy gets its own key namespace via a dtype
+        suffix (``bfloat16:qauto``) so quant-aware and plain dispatch never
+        alias the same bucket."""
+        kdtype = dtype if quant == "none" else f"{dtype}:q{quant}"
+        key = _key(msg_bytes, fast_size, slow_size, kdtype)
         with self._lock:
             self.lookups[key] = self.lookups.get(key, 0) + 1
             hit = self.table.get(key)
             if hit is not None:
                 return hit
-            choice = analytic_choice(msg_bytes, fast_size, slow_size,
-                                     self.net, allow_lossy=self.allow_lossy)
+            if quant == "none":
+                choice = analytic_choice(msg_bytes, fast_size, slow_size,
+                                         self.net,
+                                         allow_lossy=self.allow_lossy)
+            else:
+                choice = analytic_quant_choice(msg_bytes, fast_size,
+                                               slow_size, self.net, quant)
             self.table[key] = choice
             return choice
 
@@ -290,11 +364,22 @@ class AutoTuner:
     # -- measurement refinement -------------------------------------------
 
     def record(self, msg_bytes: int, fast_size: int, slow_size: int,
-               dtype: str, strategy: str, seconds: float) -> None:
-        key = _key(msg_bytes, fast_size, slow_size, dtype)
+               dtype: str, strategy: str, seconds: float,
+               quant: str = "none",
+               policy: Optional[str] = None) -> None:
+        """File one measured (strategy, quant) latency.
+
+        ``quant`` is the concrete wire level that was measured; ``policy``
+        is the dispatch namespace to file it under and defaults to
+        ``quant``.  A sweep tuning the ``"auto"`` policy measures concrete
+        levels as candidates but files them all under ``policy="auto"`` so
+        :meth:`refine` crowns one winner per auto-keyed bucket."""
+        ns = quant if policy is None else policy
+        kdtype = dtype if ns == "none" else f"{dtype}:q{ns}"
+        key = _key(msg_bytes, fast_size, slow_size, kdtype)
         with self._lock:
             self.measurements.setdefault(key, []).append(
-                _Measurement(strategy, seconds))
+                _Measurement(strategy, seconds, quant))
 
     def refine(self) -> int:
         """Overwrite table entries with measured winners; returns the number
@@ -305,18 +390,22 @@ class AutoTuner:
                 best = min(ms, key=lambda m: m.seconds)
                 prev = self.table.get(key)
                 rd_chunks = 1
-                if best.strategy == "hier_rd":
+                if best.strategy == "hier_rd" and best.quant == "none":
                     # Recompute from the bucket bound, not from the
                     # previous entry: the analytic seed only sets chunks
                     # when it itself picked hier_rd.  (The original
                     # message size is gone — the bucket bound is the only
                     # coherent size to chunk on, same as ``choose``.)
+                    # Quantized winners keep rd_chunks=1: the quantized
+                    # slow exchange requantizes per step and does not
+                    # pipeline chunks.
                     bucket_bytes, fast, slow, _ = _parse_key(key)
                     if slow > 1:
                         rd_chunks = _rd_chunks_for(bucket_bytes, fast)
                 new = ARChoice(strategy=best.strategy, rd_chunks=rd_chunks,
                                compress_slow=prev.compress_slow
-                               if prev else False)
+                               if prev else False,
+                               quant=best.quant)
                 if prev != new:
                     self.table[key] = new
                     changed += 1
@@ -387,6 +476,8 @@ class AutoTuner:
                     raise ValueError(f"unknown strategy {c.strategy!r}")
                 if int(c.rd_chunks) < 1:
                     raise ValueError(f"rd_chunks {c.rd_chunks!r} < 1")
+                if c.quant not in QUANT_LEVELS:
+                    raise ValueError(f"unknown quant {c.quant!r}")
             except (TypeError, ValueError, AttributeError, IndexError):
                 dropped += 1
                 continue
@@ -469,8 +560,13 @@ def using(tuner: AutoTuner):
 
 def resolve(ctx, msg_bytes: int, fast_size: int, slow_size: int,
             dtype: str):
-    """Concretize ctx.ar_strategy == 'auto' for one call site."""
-    choice = _ACTIVE.choose(int(msg_bytes), fast_size, slow_size, str(dtype))
+    """Concretize ctx.ar_strategy == 'auto' for one call site.  The ctx's
+    ar_quant policy flows into the lookup so quant-aware strategy picks
+    (and, under ``ar_quant="auto"``, the per-bucket level itself) come
+    from the same table."""
+    choice = _ACTIVE.choose(int(msg_bytes), fast_size, slow_size,
+                            str(dtype),
+                            quant=getattr(ctx, "ar_quant", "none"))
     return choice.apply(ctx)
 
 
@@ -485,6 +581,7 @@ def resolve_sp(msg_bytes: int, fast_size: int, slow_size: int,
 __all__ = [
     "ARChoice", "AutoTuner", "predict_times", "analytic_choice",
     "predict_sp_times", "analytic_sp_choice",
+    "predict_quant_times", "analytic_quant_choice", "QUANT_LEVELS",
     "active", "install", "install_from_path", "tuner_for", "using",
     "resolve", "resolve_sp", "bucket_of", "DISPATCHABLE",
     "TABLE_VERSION",

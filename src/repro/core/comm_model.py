@@ -214,6 +214,55 @@ def t_sp_rs_ag(msg_bytes: float, n_nodes: int, gpus_per_node: int,
     return rs + inter + ag_alpha + (1.0 - overlap) * ag_bw + net.alpha_intra
 
 
+# ---------------------------------------------------------------------------
+# Quantized (low-bit wire) collective terms — Flash-Communication analogue
+# ---------------------------------------------------------------------------
+
+# Per-group scale granularity of the quantized collectives (mirrors
+# kernels.rd_allreduce.quant.GROUP_CAP — kept literal here so the
+# alpha-beta model stays dependency-free).
+QUANT_GROUPS = {8: 128, 4: 64}
+
+# Per-phase pack/unpack cost (absmax + round/clip + nibble pack over VMEM,
+# plus kernel issue): charged once per quantized phase so latency-bound
+# small messages are not scored as free wins.
+QUANT_PACK_OVERHEAD = 2.0e-6
+
+
+def quant_wire_factor(bits: int, group: int = 0,
+                      dtype_bytes: float = 2.0) -> float:
+    """Wire bytes per full-precision byte for a quantized payload.
+
+    ``bits``-wide values plus one bf16 scale per ``group`` elements:
+    int8/g128 -> 0.508 (1.97x reduction vs bf16), int4/g64 -> 0.266
+    (3.76x).  ``group=0`` uses the level's default granularity.
+    """
+    if group <= 0:
+        group = QUANT_GROUPS[bits]
+    return (bits / 8.0 + 2.0 / group) / dtype_bytes
+
+
+def t_quant_hier_allreduce(msg_bytes: float, n_nodes: int,
+                           gpus_per_node: int, net: NetworkSpec,
+                           bits: int) -> float:
+    """Quantized hierarchical all-reduce: RS(packed a2a) + quantized RD
+    inter + AG(packed), every phase's bandwidth term scaled by the wire
+    factor, plus pack/unpack overhead per phase.  Step counts (alpha
+    terms) are unchanged — quantization buys bandwidth, not latency,
+    which is exactly why the autotuner must arbitrate the crossover
+    instead of a global flag."""
+    g, n = max(1, gpus_per_node), max(1, n_nodes)
+    wm = msg_bytes * quant_wire_factor(bits)
+    phases = 2
+    t = (t_reduce_scatter_intra(wm, g, net)
+         + t_allgather_intra(wm, g, net))
+    if n > 1:
+        t += t_rd_inter_full_exchange(wm, n, g, net)
+        # symmetric RD requantizes the running sum every exchange step
+        phases += int(math.log2(n))
+    return t + phases * QUANT_PACK_OVERHEAD
+
+
 def t_nvrar_variant(msg_bytes: float, n_nodes: int, gpus_per_node: int,
                     net: NetworkSpec, inter: str = "paper",
                     eta: float = 1.0) -> float:
@@ -283,4 +332,6 @@ __all__ = [
     "t_allgather_intra", "t_rd_inter", "t_nvrar", "t_rd_inter_full_exchange",
     "t_rd_halving_inter", "t_sp_rs_ag", "t_nvrar_variant", "nccl_model_best",
     "nvrar_speedup", "speedup_table", "decode_allreduce_bytes",
+    "QUANT_GROUPS", "QUANT_PACK_OVERHEAD", "quant_wire_factor",
+    "t_quant_hier_allreduce",
 ]

@@ -31,6 +31,13 @@ AR_STRATEGIES = ("flat", "hier_ring", "hier_rd", "hier_rd_halving", "auto")
 
 SEQ_PARALLEL_MODES = ("off", "on", "auto")
 
+# Quantized-collective levels for the TP all-reduce / RS+AG family.
+# "none" keeps full-precision wire; "int8"/"int4" force that level at every
+# call site; "auto" lets the autotuner pick {none, int8, int4} per call site
+# (requires ar_strategy="auto" so the same trace-time dispatch hook fires).
+AR_QUANT_LEVELS = ("none", "int8", "int4")
+AR_QUANT_MODES = AR_QUANT_LEVELS + ("auto",)
+
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:
@@ -57,7 +64,17 @@ class ParallelCtx:
     compress_slow: bool = False
     # Quantized all-gather: TP AR runs as RS(bf16) + AG(int8 + scales) —
     # cuts fast-axis AR wire bytes ~25-45% (beyond-paper optimization).
+    # Legacy force-knob; superseded by ``ar_quant`` which quantizes every
+    # phase and is autotuner-dispatchable.
     quant_ag: bool = False
+    # Quantized collective level for tp_all_reduce / tp_reduce_scatter /
+    # tp_all_gather: "none" | "int8" | "int4" | "auto".  int8/int4 carry
+    # nibble/byte-packed payloads + per-group bf16 scales on the wire
+    # (Flash-Communication-style low-bit comm); "auto" lets the AutoTuner
+    # pick {none, int8, int4} per call site alongside the strategy (needs
+    # ar_strategy="auto").  Error feedback for the lossy levels rides in
+    # the decode cache (see DESIGN.md §12).
+    ar_quant: str = "none"
     # Overlapped collective-matmul: route row-parallel output projections
     # (attention wo / MLP down-proj) through repro.core.overlap so chunk q's
     # all-reduce pipelines against chunk q+1's GEMM (Flash-Communication
@@ -84,6 +101,13 @@ class ParallelCtx:
         if self.seq_parallel not in SEQ_PARALLEL_MODES:
             raise ValueError(
                 f"unknown seq_parallel mode {self.seq_parallel!r}")
+        if self.ar_quant not in AR_QUANT_MODES:
+            raise ValueError(f"unknown ar_quant mode {self.ar_quant!r}")
+        if self.ar_quant == "auto" and self.ar_strategy != "auto":
+            raise ValueError(
+                "ar_quant='auto' requires ar_strategy='auto' (quant level "
+                "is picked by the same trace-time autotune dispatch); got "
+                f"ar_strategy={self.ar_strategy!r}")
 
     # -- derived -----------------------------------------------------------
     @property
@@ -131,4 +155,5 @@ def multi_pod_ctx(ar_strategy: str = "flat", cross_pod_tp: bool = False,
 
 
 __all__ = ["ParallelCtx", "LOCAL", "single_pod_ctx", "multi_pod_ctx",
-           "AR_STRATEGIES", "SEQ_PARALLEL_MODES"]
+           "AR_STRATEGIES", "SEQ_PARALLEL_MODES", "AR_QUANT_LEVELS",
+           "AR_QUANT_MODES"]

@@ -226,6 +226,7 @@ class ContinuousBatcher:
     def __init__(self, ap, params, *, slots: int = 8, s_max: int = 512,
                  ctx: ParallelCtx = LOCAL, mesh=None,
                  block_size: int = 0, n_blocks: Optional[int] = None,
+                 kv_quant: bool = False,
                  ar_table: Optional[str] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  scan_layers: bool = True, fsdp_serve: bool = False,
@@ -281,10 +282,26 @@ class ContinuousBatcher:
         # paging applies to the self-attention K/V only; attention-free
         # archs (rwkv) have fixed-size recurrent state and stay dense
         self.paged = block_size > 0 and not self.cfg.attn_free
+        if kv_quant:
+            # the unsupported combinations all die deep inside jitted code
+            # (prefill_chunk / init_cache asserts) — reject them here with
+            # the actual reason instead
+            if admit_mode == "chunked":
+                raise ValueError("kv_quant needs full-prefill admission: "
+                                 "chunked prefill cannot re-read the int8 "
+                                 "cache mid-prompt")
+            if self.paged:
+                raise ValueError("kv_quant is incompatible with the paged "
+                                 "KV layout (block_size > 0)")
+            if spec_mode:
+                raise ValueError("kv_quant is incompatible with "
+                                 "speculative decoding (the verify pass "
+                                 "rides chunked prefill)")
+        self.kv_quant = kv_quant
         kw = dict(s_max=s_max, slots=slots, scan_layers=scan_layers,
                   fsdp_serve=fsdp_serve,
                   block_size=block_size if self.paged else 0,
-                  n_blocks=n_blocks)
+                  kv_quant=kv_quant, n_blocks=n_blocks)
         self.alloc: Optional[BlockAllocator] = None
         if self.paged:
             max_blocks = paged_geometry(s_max, block_size)

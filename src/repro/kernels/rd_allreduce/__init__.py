@@ -1,6 +1,11 @@
 from .ops import rd_all_reduce_pallas
 from .ref import rd_all_reduce_ref
 from .fused_matmul import collective_matmul_pallas
+from .quant import (group_for, packed_width, quantize_pack, unpack_dequant,
+                    wire_factor)
+from .quant_kernel import quantize_pack_pallas, unpack_dequant_pallas
 
 __all__ = ["rd_all_reduce_pallas", "rd_all_reduce_ref",
-           "collective_matmul_pallas"]
+           "collective_matmul_pallas", "group_for", "packed_width",
+           "quantize_pack", "unpack_dequant", "wire_factor",
+           "quantize_pack_pallas", "unpack_dequant_pallas"]

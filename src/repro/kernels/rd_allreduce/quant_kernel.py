@@ -1,0 +1,93 @@
+"""Pallas pack/unpack kernels for the quantized collective payloads.
+
+Fused absmax -> scale -> round/clip -> nibble-pack in one VMEM pass (and
+the inverse), implementing the layout contract documented in ``quant``:
+trailing-dim groups, bf16 scales, int4 nibble pairs, saturation-safe.
+
+The collectives themselves call the jnp reference (they run inside
+shard_map where XLA already fuses the elementwise chain); these kernels
+are the standalone fast path for host-side pack/unpack (e.g. KV-handoff
+compression) and the equivalence exhibit: ``tests/test_kernels.py``
+pins kernel == reference bit-for-bit in interpret mode.
+
+Tiling: one grid row-block per program, whole trailing dim in VMEM —
+decode/prefill residual messages (<= a few MB) fit comfortably.  The
+trailing dim should be a multiple of 128 (TPU lane width); callers pad.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import QMAX, _EPS
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, *, bits: int, group: int):
+    x = x_ref[...].astype(jnp.float32)            # (R, D)
+    R, D = x.shape
+    g = x.reshape(R, D // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scale = jnp.maximum(absmax / QMAX[bits], _EPS)
+    q = jnp.clip(jnp.round(g / scale[..., None]), -QMAX[bits], QMAX[bits])
+    q = q.astype(jnp.int32).reshape(R, D)
+    if bits == 4:
+        pairs = q.reshape(R, D // 2, 2)
+        v = (pairs[..., 0] & 0xF) | ((pairs[..., 1] & 0xF) << 4)
+        q = jnp.where(v > 127, v - 256, v)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.bfloat16)
+
+
+def _dequant_kernel(q_ref, s_ref, out_ref, *, bits: int, group: int):
+    q = q_ref[...]
+    if bits == 4:
+        v = q.astype(jnp.int32) & 0xFF
+        lo = v & 0xF
+        hi = (v >> 4) & 0xF
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(v.shape[0],
+                                                 v.shape[1] * 2)
+    R, D = q.shape[0], q.shape[-1]
+    g = q.reshape(R, D // group, group).astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    out_ref[...] = (g * s[..., None]).reshape(R, D)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def quantize_pack_pallas(x: jax.Array, *, bits: int, group: int,
+                         interpret: bool = False
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """(R, D) f32/bf16 -> (packed int8 (R, Dp), scales bf16 (R, D/group))."""
+    assert x.ndim == 2, x.shape
+    R, D = x.shape
+    assert D % group == 0, (D, group)
+    dp = D if bits == 8 else D // 2
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits, group=group),
+        out_shape=(jax.ShapeDtypeStruct((R, dp), jnp.int8),
+                   jax.ShapeDtypeStruct((R, D // group), jnp.bfloat16)),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "interpret"))
+def unpack_dequant_pallas(packed: jax.Array, scales: jax.Array, *,
+                          bits: int, group: int,
+                          interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`quantize_pack_pallas`; returns f32 (R, D)."""
+    assert packed.ndim == 2, packed.shape
+    R = packed.shape[0]
+    D = packed.shape[1] * (2 if bits == 4 else 1)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits, group=group),
+        out_shape=jax.ShapeDtypeStruct((R, D), jnp.float32),
+        interpret=interpret,
+    )(packed, scales)
+
+
+__all__ = ["quantize_pack_pallas", "unpack_dequant_pallas"]

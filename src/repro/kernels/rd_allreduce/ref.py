@@ -1,4 +1,14 @@
-"""Oracle: the lax.ppermute-based recursive doubling from repro.core."""
-from ...core.hierarchical import rd_all_reduce as rd_all_reduce_ref
+"""Oracle: the lax.ppermute-based recursive doubling from repro.core.
+
+Forwarded lazily — ``core.hierarchical`` imports this package for the
+quantized pack/unpack math, so a module-level import here would be
+circular.
+"""
+
+
+def rd_all_reduce_ref(*args, **kwargs):
+    from ...core.hierarchical import rd_all_reduce
+    return rd_all_reduce(*args, **kwargs)
+
 
 __all__ = ["rd_all_reduce_ref"]

@@ -15,7 +15,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import get_config, SHAPES, cell_plan, CellPlan
 from ..core.pcontext import ParallelCtx
-from ..models.transformer import ArchPlan, make_plan, init_params, init_cache
+from ..models.transformer import (ArchPlan, make_plan, init_params,
+                                  init_cache, ef_sites_for)
 from ..parallel import steps as st
 from ..training.optimizer import adamw_init
 from .mesh import make_ctx, tp_size
@@ -136,7 +137,8 @@ def build_cell(arch: str, shape_name: str, mesh, *,
     cache_t = jax.eval_shape(
         lambda: init_cache(ap, shape.global_batch, shape.seq_len,
                            local=False, kv_quant=kv_quant,
-                           window_cache=window_cache))
+                           window_cache=window_cache,
+                           ef_sites=ef_sites_for(built.ctx, cfg)))
     tok_t = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     pos_t = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     ps, cs, ts, pss = built.in_specs

@@ -79,10 +79,10 @@ def _print_faults(m, injector, shed):
 
 
 def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool,
-                  seq_parallel: str = "off"):
+                  seq_parallel: str = "off", ar_quant: str = "none"):
     """(mesh, ctx, tp_total) for the requested layout; local when tp == 1."""
     ctx = LOCAL.replace(ar_strategy=ar_strategy, overlap_matmul=overlap,
-                        seq_parallel=seq_parallel)
+                        seq_parallel=seq_parallel, ar_quant=ar_quant)
     if tp <= 1:
         return None, ctx, 1
     from ..core.compat import AxisType, make_mesh
@@ -102,7 +102,7 @@ def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool,
 def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
               prompt_len: int = 16, max_new: int = 16,
               ar_strategy: str = "flat", ar_table=None, overlap: bool = False,
-              seq_parallel: str = "off",
+              seq_parallel: str = "off", ar_quant: str = "none",
               temperature: float = 0.0, top_k: int = 0, seed: int = 0,
               tp: int = 1, pods: int = 1, block_size: int = 0,
               spec_mode=None, spec_k: int = 4,
@@ -112,7 +112,7 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
         raise SystemExit("--block-size with --mode batch is local-path "
                          "only (use --mode trace for mesh-path paging)")
     mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
-                                  seq_parallel)
+                                  seq_parallel, ar_quant)
     ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
     s_max = prompt_len + max_new + 8
@@ -149,6 +149,7 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
               slots: int = 4, s_max: int = 128, block_size: int = 0,
               n_blocks=None, ar_strategy: str = "flat", ar_table=None,
               overlap: bool = False, seq_parallel: str = "off",
+              ar_quant: str = "none", kv_quant: bool = False,
               temperature: float = 0.0,
               top_k: int = 0, seed: int = 0, tp: int = 1, pods: int = 1,
               admit_mode: str = "full", admit_chunk: int = 32,
@@ -160,13 +161,14 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
     mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
-                                  seq_parallel)
+                                  seq_parallel, ar_quant)
     ap = make_plan(cfg, tp)
     params = init_params(jax.random.PRNGKey(seed), ap)
     injector = _make_injector(fault_plan)
     sched = ContinuousBatcher(
         ap, params, slots=slots, s_max=s_max, ctx=ctx, mesh=mesh,
-        block_size=block_size, n_blocks=n_blocks, ar_table=ar_table,
+        block_size=block_size, n_blocks=n_blocks, kv_quant=kv_quant,
+        ar_table=ar_table,
         temperature=temperature, top_k=top_k, seed=seed,
         admit_mode=admit_mode, admit_chunk=admit_chunk,
         spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
@@ -178,6 +180,10 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
     _check_outcomes(done, injector, deadline_ms)
     m = sched.metrics(done)
     layout = f"paged(bs={block_size})" if sched.paged else "dense"
+    if kv_quant:
+        layout += "+kv8"
+    if ar_quant != "none":
+        ar_strategy = f"{ar_strategy}/q={ar_quant}"
     print(f"[serve] trace {arch} [{layout} ar={ar_strategy} tp={tp}"
           f"{' overlap' if overlap else ''}]: "
           f"{m.completed}/{m.requests} reqs, {m.total_new_tokens} tokens "
@@ -216,6 +222,7 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
                slots: int = 4, s_max: int = 128, block_size: int = 0,
                n_blocks=None, ar_strategy: str = "flat", ar_table=None,
                overlap: bool = False, seq_parallel: str = "off",
+               ar_quant: str = "none",
                prefill_tp: int = 1, prefill_pods: int = 1,
                decode_tp: int = 1, decode_pods: int = 1,
                prefill_ar_table=None, decode_ar_table=None,
@@ -241,9 +248,11 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
     # decode pool stays on the fused path (its one-token and spec-verify
     # messages live in the latency-bound regime — DESIGN.md §10)
     mesh_p, ctx_p, tp_p = _mesh_and_ctx(prefill_tp, prefill_pods,
-                                        ar_strategy, overlap, seq_parallel)
+                                        ar_strategy, overlap, seq_parallel,
+                                        ar_quant)
     mesh_d, ctx_d, tp_d = _mesh_and_ctx(decode_tp, decode_pods,
-                                        ar_strategy, overlap, "off")
+                                        ar_strategy, overlap, "off",
+                                        ar_quant)
     # per-pool plans + params: same weights (same key), each pool's layout
     ap_p = make_plan(cfg, tp_p)
     ap_d = make_plan(cfg, tp_d)
@@ -339,6 +348,17 @@ def build_parser() -> argparse.ArgumentParser:
                         "per-residual all-reduce (auto = per-call-site "
                         "message-size dispatch; decode is never "
                         "decomposed)")
+    p.add_argument("--ar-quant", choices=["off", "int8", "int4", "auto"],
+                   default="off",
+                   help="quantized all-reduce wire format: int8/int4 "
+                        "payloads with per-group scales and error "
+                        "feedback on the decode residuals (auto = "
+                        "per-call-site pick among off/int8/int4, "
+                        "requires --ar-strategy auto)")
+    p.add_argument("--kv-quant", action="store_true",
+                   help="int8 KV cache with per-(pos, head) scales "
+                        "(trace mode, dense layout, full admission, "
+                        "no speculation)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--seed", type=int, default=0)
@@ -395,6 +415,7 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None):
     args = build_parser().parse_args(argv)
     spec_mode = None if args.spec_mode == "none" else args.spec_mode
+    ar_quant = "none" if args.ar_quant == "off" else args.ar_quant
     if args.mode == "batch" and args.spec_adaptive:
         raise SystemExit("--spec-adaptive is trace-mode only (the engine "
                          "runs a fixed --spec-k)")
@@ -402,6 +423,33 @@ def main(argv=None):
                                  args.deadline_ms is not None):
         raise SystemExit("--fault-plan/--deadline-ms are trace-mode only "
                          "(the batch engine has no recovery machinery)")
+    # -- incompatible flag combos: fail at parse time, naming both flags,
+    # instead of dying deep inside jitted step construction ---------------
+    if ar_quant == "auto" and args.ar_strategy != "auto":
+        raise SystemExit("--ar-quant auto rides the per-call-site "
+                         "autotuner: it requires --ar-strategy auto "
+                         f"(got --ar-strategy {args.ar_strategy})")
+    if args.kv_quant:
+        if args.mode != "trace":
+            raise SystemExit("--kv-quant is trace-mode only (the batch "
+                             "engine's prefill builds an fp cache)")
+        if args.admit_mode == "chunked":
+            raise SystemExit("--kv-quant is incompatible with "
+                             "--admit-mode chunked: chunked prefill "
+                             "cannot re-read the int8 cache mid-prompt "
+                             "(use --admit-mode full)")
+        if args.block_size:
+            raise SystemExit("--kv-quant is incompatible with "
+                             "--block-size (paged KV blocks are not "
+                             "scale-grouped); drop one of the two")
+        if spec_mode:
+            raise SystemExit("--kv-quant is incompatible with "
+                             "--spec-mode: the verify pass rides "
+                             "chunked prefill over the int8 cache")
+        if args.disagg:
+            raise SystemExit("--kv-quant is incompatible with --disagg: "
+                             "the KV handoff ships fp states between "
+                             "pools")
     if args.disagg:
         if args.mode != "trace":
             raise SystemExit("--disagg is trace-mode only")
@@ -410,6 +458,7 @@ def main(argv=None):
                    block_size=args.block_size, n_blocks=args.n_blocks,
                    ar_strategy=args.ar_strategy, ar_table=args.ar_table,
                    overlap=args.overlap, seq_parallel=args.seq_parallel,
+                   ar_quant=ar_quant,
                    prefill_tp=args.prefill_tp,
                    prefill_pods=args.prefill_pods,
                    decode_tp=args.decode_tp, decode_pods=args.decode_pods,
@@ -430,7 +479,7 @@ def main(argv=None):
                   prompt_len=args.prompt_len, max_new=args.max_new,
                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
                   overlap=args.overlap, seq_parallel=args.seq_parallel,
-                  temperature=args.temperature,
+                  ar_quant=ar_quant, temperature=args.temperature,
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
                   pods=args.pods, block_size=args.block_size,
                   spec_mode=spec_mode, spec_k=args.spec_k,
@@ -441,6 +490,7 @@ def main(argv=None):
                   block_size=args.block_size, n_blocks=args.n_blocks,
                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
                   overlap=args.overlap, seq_parallel=args.seq_parallel,
+                  ar_quant=ar_quant, kv_quant=args.kv_quant,
                   temperature=args.temperature,
                   top_k=args.top_k, seed=args.seed, tp=args.tp,
                   pods=args.pods, admit_mode=args.admit_mode,

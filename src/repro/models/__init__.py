@@ -1,9 +1,10 @@
 """Composable pure-JAX model zoo for the assigned architectures."""
 from .common import ModelConfig, GQAPlan, plan_gqa, pad_to
 from .transformer import (ArchPlan, make_plan, init_params, init_cache,
-                          forward_lm, decode_step, prefill_chunk,
-                          seed_cache, encoder_forward)
+                          ef_sites_for, forward_lm, decode_step,
+                          prefill_chunk, seed_cache, encoder_forward)
 
 __all__ = ["ModelConfig", "GQAPlan", "plan_gqa", "pad_to", "ArchPlan",
-           "make_plan", "init_params", "init_cache", "forward_lm",
-           "decode_step", "prefill_chunk", "seed_cache", "encoder_forward"]
+           "make_plan", "init_params", "init_cache", "ef_sites_for",
+           "forward_lm", "decode_step", "prefill_chunk", "seed_cache",
+           "encoder_forward"]

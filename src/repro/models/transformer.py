@@ -196,17 +196,30 @@ def _use_overlap(ctx: ParallelCtx) -> bool:
     return ctx.overlap_matmul and ctx.has_tp
 
 
-def _residual_proj(x, lhs, w, spec: str, ctx: ParallelCtx, sp: bool):
+def _residual_proj(x, lhs, w, spec: str, ctx: ParallelCtx, sp: bool,
+                   ef=None):
     """Residual add of projection + TP reduction, overlapped when enabled.
 
     ``lhs`` is the pre-projection activation, ``w`` the row-sharded weight
     with output features last; numerically identical to
-    ``_residual(x, einsum(spec, lhs, w), ctx, sp)``."""
+    ``_residual(x, einsum(spec, lhs, w), ctx, sp)``.
+
+    ``ef``: error-feedback residual for the quantized all-reduce, shaped
+    like the projection output.  When given the return value is
+    ``(x, new_ef)`` — same contract as ``tp_all_reduce`` (fp paths hand
+    ``ef`` back untouched).  Decode-only: the SP branch never sees it."""
     if _use_overlap(ctx):
         if sp:
             return x + ov.collective_matmul_reduce_scatter(
                 lhs, w, ctx, dim=1, spec=spec)
+        if ef is not None:
+            y, ef2 = ov.collective_matmul(lhs, w, ctx, spec=spec, ef=ef)
+            return x + y, ef2
         return x + ov.collective_matmul(lhs, w, ctx, spec=spec)
+    if ef is not None:
+        y, ef2 = hier.tp_all_reduce(jnp.einsum(spec, lhs, w), ctx,
+                                    scatter_dim=-1, ef=ef)
+        return x + y, ef2
     return _residual(x, jnp.einsum(spec, lhs, w), ctx, sp)
 
 
@@ -457,10 +470,25 @@ def forward_lm(params: Params, tokens, ap: ArchPlan, ctx: ParallelCtx, *,
 # ---------------------------------------------------------------------------
 
 
+def ef_sites_for(ctx: ParallelCtx, cfg) -> int:
+    """Error-feedback site count for ``init_cache(..., ef_sites=...)``.
+
+    Dense decode threads EF through its two row-parallel reductions
+    (attn wo, mlp down) whenever the ctx may quantize the wire
+    (``ar_quant`` forced or "auto"); recurrent/hybrid families take the
+    one-shot rounding and carry no EF leaf.  Every builder of one serving
+    deployment must derive the count from the same (ctx, cfg) so cache
+    pytrees stay structurally identical across steps."""
+    if getattr(ctx, "ar_quant", "none") == "none" or cfg.family != "dense":
+        return 0
+    return 2
+
+
 def init_cache(ap: ArchPlan, batch: int, s_max: int,
                local: bool = True, *, kv_quant: bool = False,
                window_cache: bool = False, block_size: int = 0,
-               n_blocks: Optional[int] = None) -> Params:
+               n_blocks: Optional[int] = None,
+               ef_sites: int = 0) -> Params:
     """Decode cache pytree, leading layer axis.  ``local`` shapes are
     per-device (tp already divided out); global shapes otherwise.
 
@@ -477,6 +505,13 @@ def init_cache(ap: ArchPlan, batch: int, s_max: int,
     :class:`repro.inference.kv_cache.BlockAllocator`.  Paging applies to
     the self-attention K/V only; recurrent / encoder leaves are tiny,
     fixed-size per-slot states and stay batch-indexed.
+    ef_sites > 0: error-feedback residual for quantized all-reduce
+    (``ctx.ar_quant``) — one f32 (d_model,) state per (layer, reduction
+    site, device, slot), carried as the cache leaf ``ef`` with shape
+    (L, ef_sites, tp, batch, d_model) so it rides the decode scan and
+    slot admission for free.  The device dim is this rank's OWN rounding
+    residual (sharded over TP); dense decode has two sites per layer
+    (attn wo, mlp down).
     """
     cfg = ap.cfg
     tp = 1 if local else ap.tp
@@ -533,6 +568,9 @@ def init_cache(ap: ArchPlan, batch: int, s_max: int,
                                cfg.dtype)
         c["enc_v"] = jnp.zeros((Ldec, batch, cfg.enc_seq, u, cfg.head_dim),
                                cfg.dtype)
+    if ef_sites > 0:
+        c["ef"] = jnp.zeros((Ldec, ef_sites, tp, batch, cfg.d_model),
+                            jnp.float32)
     return c
 
 
@@ -577,6 +615,28 @@ def seed_cache(cache: Params, states: Params, *, slot=None,
                                      cache["block_tbl"], slot)
             out["v"] = _paged_splice(cache["v"], states["v"],
                                      cache["block_tbl"], slot)
+        elif "k_scale" in cache:
+            # int8 KV target: a raw astype would truncate the fp states and
+            # leave the scale rows zero (dequant -> 0), so the splice
+            # quantizes with the same per-(pos, head) scales the decode
+            # write path uses (layers.attention_decode).
+            idx0 = (0, 0, 0, 0, 0) if slot is None else (0, slot, 0, 0, 0)
+
+            def _q8(t):  # (L,B,S,U,hd) -> int8 payload + bf16 (L,B,S,U)
+                tf = t.astype(jnp.float32)
+                sc = jnp.maximum(jnp.max(jnp.abs(tf), axis=-1) / 127.0,
+                                 1e-30)
+                qq = jnp.clip(jnp.round(tf / sc[..., None]), -127, 127)
+                return qq.astype(jnp.int8), sc.astype(jnp.bfloat16)
+
+            kq, ksc = _q8(states["k"])
+            vq, vsc = _q8(states["v"])
+            out["k"] = lax.dynamic_update_slice(cache["k"], kq, idx0)
+            out["v"] = lax.dynamic_update_slice(cache["v"], vq, idx0)
+            out["k_scale"] = lax.dynamic_update_slice(cache["k_scale"],
+                                                      ksc, idx0[:-1])
+            out["v_scale"] = lax.dynamic_update_slice(cache["v_scale"],
+                                                      vsc, idx0[:-1])
         else:
             idx0 = (0, 0, 0, 0, 0) if slot is None else (0, slot, 0, 0, 0)
             out["k"] = lax.dynamic_update_slice(
@@ -591,6 +651,17 @@ def seed_cache(cache: Params, states: Params, *, slot=None,
             else:
                 idx = (0, slot) + (0,) * (cache[nm].ndim - 2)
                 out[nm] = lax.dynamic_update_slice(cache[nm], upd, idx)
+    if "ef" in cache:
+        # A fresh request starts with no accumulated rounding residual —
+        # stale EF from the slot's previous occupant must never leak into
+        # the new request's reductions.
+        if slot is None:
+            out["ef"] = jnp.zeros_like(cache["ef"])
+        else:
+            zero = jnp.zeros(cache["ef"].shape[:3] + (1,)
+                             + cache["ef"].shape[4:], cache["ef"].dtype)
+            out["ef"] = lax.dynamic_update_slice(cache["ef"], zero,
+                                                 (0, 0, 0, slot, 0))
     if enc_kv is not None and "enc_k" in cache:
         ek, ev = enc_kv
         if slot is None:
@@ -612,9 +683,20 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
     """One block, one token.  x: (B,1,D) replicated; cache_l: this layer's
     cache slice.  Returns (x, new_cache_l).  Every sublayer output is a
     TP-partial reduced by tp_all_reduce — the collective the paper targets.
+
+    When the cache carries an ``ef`` leaf (quantized all-reduce with error
+    feedback, shape (sites, 1, B, D) per layer locally), the dense attn-wo
+    and mlp-down reductions consume and refresh their per-site residual;
+    every other reduction site takes the one-shot rounding.
     """
     cfg = ap.cfg
     new_c: Params = {}
+    ef = cache_l.get("ef") if isinstance(cache_l, dict) else None
+
+    def _ef_in(site):
+        # (sites, 1, B, D) -> (B, 1, D): the message layout of one token
+        return jnp.swapaxes(ef[site], 0, 1)
+
     if cfg.family == "ssm":
         h = L.apply_norm(x, bp["ln1"], cfg)
         tm, st = R.rwkv_time_mix_step(
@@ -630,6 +712,8 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
         red = hier.tp_all_reduce(stacked, ctx, scatter_dim=-1)
         x = x + jax.nn.sigmoid(red[1].astype(jnp.float32)).astype(x.dtype) \
             * red[0]
+        if ef is not None:
+            new_c["ef"] = ef
         return x, new_c
 
     h = L.apply_norm(x, bp["ln1"], cfg)
@@ -646,6 +730,7 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
         chunk=attn_chunk, ring=kv_ring, project=hybrid,
         block_tbl=block_tbl)
     new_c.update(kv_new)
+    ef_attn = ef_mlp = None
     if hybrid:
         so, st = S.ssm_step(bp["ssm"], h, {"conv": cache_l["conv"],
                                            "ssm": cache_l["ssm"]}, cfg, ctx)
@@ -653,6 +738,12 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
         beta = bp["beta"].astype(x.dtype)
         x = x + hier.tp_all_reduce(beta[0] * attn_out + beta[1] * so, ctx,
                                    scatter_dim=-1)
+        if ef is not None:
+            ef_attn = _ef_in(0)
+    elif ef is not None:
+        x, ef_attn = _residual_proj(x, attn_out, bp["attn"]["wo"],
+                                    "bsqh,qhd->bsd", ctx, sp=False,
+                                    ef=_ef_in(0))
     else:
         x = _residual_proj(x, attn_out, bp["attn"]["wo"], "bsqh,qhd->bsd",
                            ctx, sp=False)
@@ -669,10 +760,20 @@ def block_decode(bp: Params, x, cache_l: Params, ap: ArchPlan,
     if cfg.is_moe:
         out = M.moe_ffn_dense(bp["moe"], h2, cfg, ctx)
         x = x + hier.tp_all_reduce(out, ctx, scatter_dim=-1)
+        if ef is not None:
+            ef_mlp = _ef_in(1)
+    elif ef is not None:
+        x, ef_mlp = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2, cfg),
+                                   L.mlp_down_w(bp["mlp"], cfg),
+                                   "bsf,fd->bsd", ctx, sp=False,
+                                   ef=_ef_in(1))
     else:
         x = _residual_proj(x, L.mlp_hidden(bp["mlp"], h2, cfg),
                            L.mlp_down_w(bp["mlp"], cfg), "bsf,fd->bsd",
                            ctx, sp=False)
+    if ef is not None:
+        new_c["ef"] = jnp.stack([jnp.swapaxes(ef_attn, 0, 1),
+                                 jnp.swapaxes(ef_mlp, 0, 1)])
     return x, new_c
 
 
@@ -764,7 +865,12 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
     B, C = tokens.shape
     sp = _seq_parallel_active(ctx, cfg, B * C, C, sp)
     block_tbl = cache.get("block_tbl")
-    kv_cache = {k2: v for k2, v in cache.items() if k2 != "block_tbl"}
+    # The EF residual is a decode-loop state keyed to the (B, 1, D) token
+    # message; prefill reductions over (B, C, D) chunks take the one-shot
+    # rounding and the admitted slot's decode EF restarts from zero.
+    ef_buf = cache.get("ef")
+    kv_cache = {k2: v for k2, v in cache.items()
+                if k2 not in ("block_tbl", "ef")}
     x = L.embed_lookup(params["embed"], tokens, ctx, ap.vocab_pad, sp=sp)
 
     def body(x, inp):
@@ -798,6 +904,14 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
         new_cache = _stack(ncs)
     if block_tbl is not None:
         new_cache["block_tbl"] = block_tbl
+    if ef_buf is not None:
+        if slot is None:
+            new_cache["ef"] = jnp.zeros_like(ef_buf)
+        else:
+            zero = jnp.zeros(ef_buf.shape[:3] + (1,) + ef_buf.shape[4:],
+                             ef_buf.dtype)
+            new_cache["ef"] = lax.dynamic_update_slice(
+                ef_buf, zero, (0, 0, 0, slot, 0))
     if not return_logits:
         return None, new_cache
     x = L.apply_norm(x, params["final_norm"], cfg)
@@ -808,5 +922,6 @@ def prefill_chunk(params: Params, cache: Params, tokens, positions,
 
 
 __all__ = ["ArchPlan", "make_plan", "init_params", "init_cache",
-           "forward_lm", "decode_step", "prefill_chunk", "seed_cache",
-           "block_forward", "block_decode", "encoder_forward"]
+           "ef_sites_for", "forward_lm", "decode_step", "prefill_chunk",
+           "seed_cache", "block_forward", "block_decode",
+           "encoder_forward"]

@@ -219,6 +219,11 @@ def cache_spec(cache, ctx: ParallelCtx):
             return P(None, dp, None)
         if name == "wkv":                           # (L,B,H,hd,hd)
             return P(None, dp, tp_s, None, None)
+        if name == "ef":                            # (L,sites,tp,B,D)
+            # Error-feedback residual for quantized all-reduce: one
+            # per-device rounding state, so the device dim shards over
+            # the TP axes (each rank keeps only its own residual).
+            return P(None, None, tp_s, dp, None)
         raise KeyError(f"no cache rule for {name} ndim={nd}")
 
     return tree_map_with_path(f, cache)

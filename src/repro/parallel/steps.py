@@ -49,7 +49,8 @@ from ..core.pcontext import ParallelCtx, LOCAL
 from ..core import autotune
 from ..core import hierarchical as hier
 from ..models.transformer import (ArchPlan, forward_lm, decode_step,
-                                  init_cache, prefill_chunk, seed_cache)
+                                  ef_sites_for, init_cache, prefill_chunk,
+                                  seed_cache)
 from ..models import layers as L
 from ..training.optimizer import (adamw_init, adamw_update, cosine_lr,
                                   global_grad_norm)
@@ -308,7 +309,8 @@ def build_decode_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
 
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, 1, 8, local=False, kv_quant=kv_quant,
-        window_cache=window_cache))
+        window_cache=window_cache,
+        ef_sites=ef_sites_for(serve_ctx, cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     dp = serve_ctx.dp
     dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
@@ -365,7 +367,8 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                 params, tokens, ap, serve_ctx, sp=sp,
                 scan_layers=scan_layers, collect_state=True,
                 layer_map=layer_map, chunk=chunk, **kw)
-        cache = init_cache(ap, B, s_max, local=True)
+        cache = init_cache(ap, B, s_max, local=True,
+                           ef_sites=ef_sites_for(serve_ctx, cfg))
         enc_kv = None
         if cfg.enc_layers:
             def xkv(bp):
@@ -376,7 +379,8 @@ def build_prefill(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
         nxt = L.greedy_sample(logits[:, -1], serve_ctx, cfg.vocab_size)
         return nxt, cache
 
-    cache_t = jax.eval_shape(lambda: init_cache(ap, 1, 8, local=False))
+    cache_t = jax.eval_shape(lambda: init_cache(
+        ap, 1, 8, local=False, ef_sites=ef_sites_for(serve_ctx, cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     dp = serve_ctx.dp
     dspec = dp if len(dp) > 1 else (dp[0] if dp else None)
@@ -499,21 +503,25 @@ def _sample_next_slots(logits, serve_ctx: ParallelCtx, cfg, keys, idx,
 def build_cache_init(ap: ArchPlan, ctx: ParallelCtx, mesh, *, slots: int,
                      s_max: int, block_size: int = 0,
                      n_blocks: Optional[int] = None,
+                     kv_quant: bool = False,
                      fsdp_serve: bool = False) -> BuiltStep:
     """() -> zeroed decode cache for ``slots`` batch rows (paged when
-    block_size > 0), created shard-local under the mesh."""
+    block_size > 0, int8 K/V + scales when ``kv_quant``), created
+    shard-local under the mesh."""
     serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
+    ef_sites = ef_sites_for(serve_ctx, ap.cfg)
 
     def init():
         return init_cache(ap, slots, s_max, local=True,
-                          block_size=block_size, n_blocks=n_blocks)
+                          block_size=block_size, n_blocks=n_blocks,
+                          kv_quant=kv_quant, ef_sites=ef_sites)
 
     if mesh is None:
         return BuiltStep(fn=init, in_specs=(), out_specs=None, mesh=None,
                          ctx=serve_ctx)
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, kv_quant=kv_quant, ef_sites=ef_sites))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     fn = shard_map(init, mesh=mesh, in_specs=(), out_specs=cspecs,
                    check_vma=False)
@@ -526,6 +534,7 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                      temperature: float = 0.0, top_k: int = 0,
                      block_size: int = 0, n_blocks: Optional[int] = None,
                      slots: int = 1, attn_chunk=None,
+                     kv_quant: bool = False,
                      ar_table: Optional[str] = None) -> BuiltStep:
     """Fused continuous-batching step: decode all slots + sample + advance
     the device-side slot state.
@@ -582,7 +591,8 @@ def build_serve_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                          ctx=serve_ctx, donate_argnums=(1, 2))
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, kv_quant=kv_quant,
+        ef_sites=ef_sites_for(serve_ctx, ap.cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     sspec = {"tokens": P(None), "positions": P(None),
              "remaining": P(None), "active": P(None),
@@ -651,6 +661,7 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
                            block_size: int = 0,
                            n_blocks: Optional[int] = None,
                            attn_chunk: int = 0,
+                           kv_quant: bool = False,
                            ar_table: Optional[str] = None) -> BuiltStep:
     """Speculative-decoding verify step: score ``k`` drafted tokens for
     every slot in ONE fused pass over the chunked-prefill machinery.
@@ -682,6 +693,10 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
     if cfg.family != "dense":
         raise ValueError("speculative verify rides the chunked-prefill "
                          f"path: dense families only, not {cfg.family!r}")
+    if kv_quant:
+        raise ValueError("spec verify rides prefill_chunk, which cannot "
+                         "re-read an int8 KV cache mid-chunk: kv_quant "
+                         "is incompatible with speculative decoding")
     if k < 1:
         raise ValueError(f"spec k must be >= 1, got {k}")
     C = k + 1
@@ -721,7 +736,7 @@ def build_spec_verify_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, k: int,
                          mesh=None, ctx=serve_ctx, donate_argnums=(1,))
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, ef_sites=ef_sites_for(serve_ctx, ap.cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     sspec = {"tokens": P(None), "positions": P(None),
              "remaining": P(None), "active": P(None)}
@@ -819,7 +834,7 @@ def build_kv_splice_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                          mesh=None, ctx=serve_ctx, donate_argnums=(0,))
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, ef_sites=ef_sites_for(serve_ctx, ap.cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     kv_spec = shd.kv_states_spec(serve_ctx)
     in_specs = (cspecs, kv_spec, kv_spec, P())
@@ -834,6 +849,7 @@ def build_admit_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                      scan_layers: bool = True, fsdp_serve: bool = False,
                      temperature: float = 0.0, top_k: int = 0,
                      block_size: int = 0, n_blocks: Optional[int] = None,
+                     kv_quant: bool = False,
                      ar_table: Optional[str] = None) -> BuiltStep:
     """Full-prefill admission: run one request's prompt, splice its KV /
     recurrent states into cache row ``slot`` on device, sample the first
@@ -870,7 +886,8 @@ def build_admit_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *, s_max: int,
                          mesh=None, ctx=serve_ctx, donate_argnums=(1,))
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, kv_quant=kv_quant,
+        ef_sites=ef_sites_for(serve_ctx, ap.cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     in_specs = (pspecs, cspecs, P(None, None), P(), P(None))
     out_specs = (P(None), cspecs)
@@ -888,6 +905,7 @@ def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                            block_size: int = 0,
                            n_blocks: Optional[int] = None,
                            sample: bool = True,
+                           kv_quant: bool = False,
                            ar_table: Optional[str] = None) -> BuiltStep:
     """Chunked-prefill admission: feed the prompt through in fixed-size
     chunks of ``chunk`` tokens, writing K/V into cache row ``slot`` as it
@@ -903,6 +921,10 @@ def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
     Dense families only (see transformer.prefill_chunk).
     """
     cfg = ap.cfg
+    if kv_quant:
+        raise ValueError("chunked admission rides prefill_chunk, which "
+                         "cannot re-read an int8 KV cache mid-prompt: "
+                         "kv_quant needs full-prefill admission")
     ar_tuner = autotune.tuner_for(ar_table)
     serve_ctx = _serve_ctx(ctx, mesh, fsdp_serve)
     pspecs, _, layer_map, full_params = _serve_params(ap, serve_ctx, mesh,
@@ -927,7 +949,7 @@ def build_admit_chunk_step(ap: ArchPlan, ctx: ParallelCtx, mesh, *,
                          mesh=None, ctx=serve_ctx, donate_argnums=(1,))
     cache_t = jax.eval_shape(lambda: init_cache(
         ap, slots, s_max, local=False, block_size=block_size,
-        n_blocks=n_blocks))
+        n_blocks=n_blocks, ef_sites=ef_sites_for(serve_ctx, ap.cfg)))
     cspecs = shd.cache_spec(cache_t, serve_ctx)
     in_specs = (pspecs, cspecs, P(None, None), P(None, None), P(), P(),
                 P(None))

@@ -61,3 +61,9 @@ def test_elastic_restart(dist_runner):
 def test_faults_injected(dist_runner):
     out = dist_runner("case_faults.py")
     assert "faults OK" in out
+
+
+@pytest.mark.dist
+def test_quant_allreduce(dist_runner):
+    out = dist_runner("case_quant_ar.py")
+    assert "quant_ar OK" in out

@@ -284,3 +284,35 @@ def test_moe_expert_ffn(case):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                atol=_tol(dt), rtol=_tol(dt))
+
+
+# ---------------------------------------------------------------------------
+# quantized-collective pack/unpack (ar_quant wire format)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.rd_allreduce.quant import quantize_pack, unpack_dequant
+from repro.kernels.rd_allreduce.quant_kernel import (quantize_pack_pallas,
+                                                     unpack_dequant_pallas)
+
+QP_CASES = [(8, 128, 4, 512), (8, 64, 1, 256), (4, 64, 4, 384),
+            (4, 128, 2, 128)]
+
+
+@pytest.mark.parametrize("case", QP_CASES,
+                         ids=[f"b{b}g{g}" for b, g, _, _ in QP_CASES])
+def test_quant_pack_kernel_matches_reference(case):
+    """The fused Pallas pack/unpack is bit-for-bit the jnp reference: same
+    int8 payload (nibble layout included), same bf16 scales, same f32
+    dequant — interpret mode, both bit widths."""
+    bits, group, R, D = case
+    x = jnp.asarray(rng.standard_normal((R, D)) * 3.0, jnp.float32)
+    q_ref, s_ref = quantize_pack(x, bits, group)
+    q_k, s_k = quantize_pack_pallas(x, bits=bits, group=group,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(s_k, np.float32),
+                                  np.asarray(s_ref, np.float32))
+    d_ref = unpack_dequant(q_ref, s_ref, bits, group)
+    d_k = unpack_dequant_pallas(q_k, s_k, bits=bits, group=group,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_ref))

@@ -1,0 +1,184 @@
+"""Property tests for the quantized-collective pack/unpack layer
+(kernels.rd_allreduce.quant) and its error-feedback contract — the
+single-device half of the ar_quant test matrix (device-exact collective
+behavior lives in tests/dist_cases/case_quant_ar.py)."""
+import numpy as np
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pure-pytest fallback (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, st
+
+from repro.kernels.rd_allreduce import quant as q
+
+
+def _roundtrip(x, bits, group):
+    packed, scales = q.quantize_pack(jnp.asarray(x), bits, group)
+    return np.asarray(q.unpack_dequant(packed, scales, bits, group),
+                      np.float32), np.asarray(scales, np.float32)
+
+
+@given(st.sampled_from([8, 4]), st.sampled_from([64, 128, 256, 384]),
+       st.integers(0, 50))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_error_bound(bits, d, seed):
+    """|x - deq(Q(x))| <= step/2 + the bf16-scale storage error.
+
+    The exact bound: with f32 scale s and stored bf16 scale s_b, the error
+    is at most 0.51*s (rounding) + qmax*|s - s_b| (scale storage) per
+    element of the group.
+    """
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((3, d)) * rng.uniform(1e-3, 1e3)).astype(
+        np.float32)
+    group = q.group_for(d, bits)
+    out, s_b = _roundtrip(x, bits, group)
+    g = x.reshape(3, d // group, group)
+    s_f = np.maximum(np.abs(g).max(-1) / q.QMAX[bits], 1e-30)
+    bound = 0.51 * s_f + q.QMAX[bits] * np.abs(s_f - s_b)
+    err = np.abs(out.reshape(g.shape) - g)
+    assert np.all(err <= bound[..., None] + 1e-12), \
+        (bits, d, err.max(), bound.min())
+
+
+@given(st.sampled_from([8, 4]), st.integers(-6, 6), st.integers(0, 20))
+@settings(max_examples=40, deadline=None)
+def test_scale_invariance_power_of_two(bits, e, seed):
+    """Scaling the input by 2^e scales the round-trip output by exactly
+    2^e: pow2 factors move only the (exactly-representable) exponent of
+    the bf16 scale, so the int payload is bit-identical."""
+    rng = np.random.default_rng(seed)
+    d = 128
+    x = rng.standard_normal((2, d)).astype(np.float32)
+    group = q.group_for(d, bits)
+    p1, s1 = q.quantize_pack(jnp.asarray(x), bits, group)
+    p2, s2 = q.quantize_pack(jnp.asarray(x * 2.0 ** e), bits, group)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2)), (bits, e)
+    out1, _ = _roundtrip(x, bits, group)
+    out2, _ = _roundtrip(x * 2.0 ** e, bits, group)
+    np.testing.assert_array_equal(out2, out1 * 2.0 ** e)
+
+
+def test_int4_saturation_safe():
+    """A huge outlier sets the scale; every other value quantizes toward
+    zero but nothing wraps: all decoded magnitudes stay <= qmax*scale and
+    the outlier itself is reproduced to within half a step."""
+    x = np.ones((1, 64), np.float32)
+    x[0, 7] = 1000.0
+    out, s = _roundtrip(x, 4, 64)
+    assert np.all(np.abs(out) <= 7 * s.max() * 1.01)
+    assert abs(out[0, 7] - 1000.0) <= s.max()          # outlier survives
+    assert np.all(out[0, :7] >= 0.0)                   # no sign wraparound
+    # exact grid points round-trip exactly (scale is a power of two here)
+    grid = (np.arange(-7, 8, dtype=np.float32) * 0.5)[None, :]
+    grid = np.pad(grid, ((0, 0), (0, 1)))              # int4 needs even D
+    out_g, _ = _roundtrip(grid, 4, q.group_for(16, 4))
+    np.testing.assert_allclose(out_g, grid, atol=2e-3)
+
+
+@given(st.sampled_from([3, 5, 7, 9, 21, 129]), st.integers(0, 20))
+@settings(max_examples=30, deadline=None)
+def test_odd_length_tail_group1(d, seed):
+    """Odd trailing dims degrade to group=1 (per-element scales): still a
+    valid layout for int8 and exact up to bf16 scale storage."""
+    assert q.group_for(d, 8) == 1
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, d)).astype(np.float32)
+    out, s_b = _roundtrip(x, 8, 1)
+    bound = 0.51 * np.abs(x) / 127 + 127 * np.abs(
+        np.abs(x) / 127 - s_b.reshape(x.shape))
+    assert np.all(np.abs(out - x) <= bound + 1e-9)
+
+
+def test_group_for_divides_and_caps():
+    for d in (1, 2, 6, 48, 64, 96, 128, 384, 1024, 4096):
+        for bits in (8, 4):
+            g = q.group_for(d, bits)
+            assert d % g == 0 and g <= q.GROUP_CAP[bits]
+            assert g & (g - 1) == 0                    # power of two
+
+
+def test_nan_inf_poison_exactly_their_group():
+    """A non-finite value poisons its OWN group's scale (so dequant is
+    non-finite there and the serving quarantine fires) and leaves every
+    other group bit-exact — no masking, no silent laundering."""
+    d, group = 256, 128
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((1, d)).astype(np.float32)
+    for bad in (np.nan, np.inf, -np.inf):
+        xb = x.copy()
+        xb[0, 3] = bad                                  # group 0
+        out, _ = _roundtrip(xb, 8, group)
+        assert not np.isfinite(out[0, :group]).all(), bad
+        clean, _ = _roundtrip(x, 8, group)
+        np.testing.assert_array_equal(out[0, group:], clean[0, group:])
+
+
+def test_error_feedback_drains_on_constant_input():
+    """The EF recurrence e' = (v+e) - deq(Q(v+e)) on a CONSTANT message:
+    the residual stays bounded by one quantization step and the running
+    mean of the emitted values converges to the true value — the property
+    that makes int4 decode usable (DESIGN.md §12)."""
+    d, bits = 128, 4
+    group = q.group_for(d, bits)
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((1, d)).astype(np.float32)
+    e = np.zeros_like(v)
+    emitted = []
+    step = np.abs(v).max() / q.QMAX[bits]
+    for _ in range(64):
+        msg = v + e
+        out, _ = _roundtrip(msg, bits, group)
+        e = msg - out
+        emitted.append(out)
+        assert np.abs(e).max() <= 1.1 * step            # never accumulates
+    mean = np.mean(emitted, axis=0)
+    assert np.abs(mean - v).max() <= 0.05 * step + 0.02 * np.abs(v).max()
+
+
+def test_overlap_chunk_alignment_predicate():
+    """_quant_chunk_ok gates the chunked overlapped matmul: chunking is
+    taken only when both the full output dim and the per-chunk step are
+    multiples of group_cap * n_scatter (identical absolute feature windows
+    chunked or not -> bitwise chunk-invariance)."""
+    from repro.core.overlap import _quant_chunk_ok
+    assert _quant_chunk_ok(1024, 4, 2, 8)       # 1024 % 256, 256 % 256
+    assert not _quant_chunk_ok(960, 4, 2, 8)    # 960 % 256 != 0
+    assert not _quant_chunk_ok(1024, 8, 2, 8)   # step 128 % 256 != 0
+    assert _quant_chunk_ok(512, 4, 2, 4)        # int4 cap 64: 128-aligned
+    assert not _quant_chunk_ok(512, 4, 8, 8)    # cap*8=1024 > 512
+
+
+def test_seed_cache_quantized_splice():
+    """Admitting a prefilled request into an int8 KV cache must quantize
+    the fp states (payload + per-(pos, head) scales), not raw-cast them:
+    the spliced rows dequantize back to the states within one step, and
+    other slots stay untouched."""
+    import jax
+    from repro.models import ModelConfig, make_plan, init_params, \
+        init_cache, seed_cache
+
+    cfg = ModelConfig(name="kv8", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=64, dtype=jnp.float32)
+    ap = make_plan(cfg, 1)
+    cache = init_cache(ap, 3, 32, local=True, kv_quant=True)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    rng = np.random.default_rng(0)
+    S = 5
+    u, hd = cache["k"].shape[3], cache["k"].shape[4]
+    states = {nm: jnp.asarray(rng.standard_normal((cfg.n_layers, 1, S,
+                                                   u, hd)), jnp.float32)
+              for nm in ("k", "v")}
+    out = seed_cache(cache, states, slot=1)
+    for nm in ("k", "v"):
+        deq = (np.asarray(out[nm][:, 1, :S], np.float32)
+               * np.asarray(out[nm + "_scale"][:, 1, :S],
+                            np.float32)[..., None])
+        ref = np.asarray(states[nm][:, 0])
+        # half-step rounding + bf16 scale storage (127 * s * 2^-9 ~ 0.25s)
+        step = np.abs(ref).max(-1, keepdims=True) / 127.0
+        assert np.all(np.abs(deq - ref) <= 0.8 * step + 1e-6), nm
+        assert np.asarray(out[nm][:, 0]).max() == 0   # other slots clean
+        assert np.asarray(out[nm][:, 2]).max() == 0
