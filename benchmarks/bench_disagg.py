@@ -53,9 +53,10 @@ def _trace(cfg, mean_in, mean_out, seed=1):
 
 
 def _colocated_cell(cfg, ap, params, name, mean_in, mean_out):
-    from repro.inference.scheduler import ContinuousBatcher
-    sched = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
-                              block_size=8)
+    from repro.inference.spec import ReplicaSpec, build_replica
+    sched = build_replica(ReplicaSpec(arch="llama3.2-1b", slots=SLOTS,
+                                      s_max=S_MAX, block_size=8),
+                          ap=ap, params=params)
     done = sched.run(_trace(cfg, mean_in, mean_out))
     assert all(r.output is not None for r in done)
     m = sched.metrics(done)
@@ -66,14 +67,11 @@ def _colocated_cell(cfg, ap, params, name, mean_in, mean_out):
 
 
 def _disagg_cell(cfg, ap, params, name, mean_in, mean_out, ref_outputs):
-    from repro.inference.disagg import (DisaggCoordinator, PrefillPool,
-                                        pool_tuner)
-    from repro.inference.scheduler import ContinuousBatcher
-    pool = PrefillPool(ap, params, s_max=S_MAX)
-    tuner = pool_tuner(None)
-    decode = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
-                               block_size=8, ar_table=tuner)
-    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner)
+    from repro.inference.spec import ReplicaSpec, build_replica
+    coord = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX,
+                    disagg=True, block_size=8, prefill_block_size=0),
+        ap=ap, params=params)
     done = coord.run(_trace(cfg, mean_in, mean_out))
     assert all(r.output is not None for r in done)
     for r in done:   # the headline correctness bar: bitwise trace parity

@@ -65,26 +65,23 @@ def _plan(rate: float):
 
 def _reference(cfg, ap, params, mean_in, mean_out):
     """Fault-free colocated replay: the bitwise-parity oracle."""
-    from repro.inference.scheduler import ContinuousBatcher
-    sched = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
-                              block_size=8)
+    from repro.inference.spec import ReplicaSpec, build_replica
+    sched = build_replica(ReplicaSpec(arch="llama3.2-1b", slots=SLOTS,
+                                      s_max=S_MAX, block_size=8),
+                          ap=ap, params=params)
     done = sched.run(_trace(cfg, mean_in, mean_out))
     assert all(r.output is not None for r in done)
     return {r.rid: r.output for r in done}
 
 
 def _fault_cell(cfg, ap, params, name, mean_in, mean_out, rate, ref):
-    from repro.inference.disagg import (DisaggCoordinator, PrefillPool,
-                                        pool_tuner)
     from repro.inference.faults import FaultInjector
-    from repro.inference.scheduler import ContinuousBatcher
+    from repro.inference.spec import ReplicaSpec, build_replica
     inj = FaultInjector(_plan(rate)) if rate > 0 else None
-    pool = PrefillPool(ap, params, s_max=S_MAX)
-    tuner = pool_tuner(None)
-    decode = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
-                               block_size=8, ar_table=tuner, injector=inj)
-    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner,
-                              injector=inj)
+    coord = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX,
+                    disagg=True, block_size=8, prefill_block_size=0),
+        ap=ap, params=params, injector=inj)
     done = coord.run(_trace(cfg, mean_in, mean_out))
     shed = [r for r in done if r.output is None]
     # shed requests are *reported*, never silently dropped

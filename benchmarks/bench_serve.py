@@ -26,9 +26,12 @@ N_REQ = 16
 def _cell(ap, params, vocab, *, rate, slots, block_size, n_blocks=None,
           seed=1):
     import jax  # noqa: F401  (env sanity)
-    from repro.inference.scheduler import ContinuousBatcher, make_trace
-    sched = ContinuousBatcher(ap, params, slots=slots, s_max=S_MAX,
-                              block_size=block_size, n_blocks=n_blocks)
+    from repro.inference.scheduler import make_trace
+    from repro.inference.spec import ReplicaSpec, build_replica
+    sched = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=slots, s_max=S_MAX,
+                    block_size=block_size, n_blocks=n_blocks),
+        ap=ap, params=params)
     reqs = make_trace(N_REQ, mean_in=12, mean_out=10, rate=rate,
                       vocab=vocab, seed=seed)
     done = sched.run(reqs)
@@ -106,13 +109,15 @@ def sweep(out_path: str = "BENCH_serve.json"):
 
     # decode-heavy overcommit cell: three long decodes against a pool that
     # holds ~1.5 of them -> preemption keeps the trace completing
-    from repro.inference.scheduler import ContinuousBatcher, Request
+    from repro.inference.scheduler import Request
+    from repro.inference.spec import ReplicaSpec, build_replica
     rng = np.random.default_rng(5)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                16).astype(np.int32),
                     max_new=48, arrival_s=0.0) for i in range(3)]
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=S_MAX,
-                              block_size=8, n_blocks=17)
+    sched = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=S_MAX,
+                    block_size=8, n_blocks=17), ap=ap, params=params)
     done = sched.run(reqs)
     assert all(r.output is not None for r in done)
     m = sched.metrics(done)

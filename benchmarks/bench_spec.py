@@ -38,10 +38,12 @@ def _make_reqs(vocab, seed=3):
                       vocab=vocab, seed=seed)
 
 
-def _run(ap, params, vocab, **kw):
-    from repro.inference.scheduler import ContinuousBatcher
-    sched = ContinuousBatcher(ap, params, slots=SLOTS, s_max=S_MAX,
-                              block_size=8, **kw)
+def _run(ap, params, vocab, *, drafter=None, **kw):
+    from repro.inference.spec import ReplicaSpec, build_replica
+    sched = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX,
+                    block_size=8, **kw),
+        ap=ap, params=params, drafter=drafter)
     done = sched.run(_make_reqs(vocab))
     assert all(r.output is not None for r in done), "dropped requests"
     return {r.rid: r.output for r in done}, sched.metrics(done)

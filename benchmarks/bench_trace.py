@@ -50,11 +50,13 @@ def real_scheduler():
     import jax
     from repro.configs import get_smoke
     from repro.models.transformer import make_plan, init_params
-    from repro.inference.scheduler import ContinuousBatcher, make_trace
+    from repro.inference.scheduler import make_trace
+    from repro.inference.spec import ReplicaSpec, build_replica
     cfg = get_smoke("llama3.2-1b")
     ap = make_plan(cfg, 1)
     params = init_params(jax.random.PRNGKey(0), ap)
-    sched = ContinuousBatcher(ap, params, slots=4, s_max=96)
+    sched = build_replica(ReplicaSpec(arch="llama3.2-1b", slots=4,
+                                      s_max=96), ap=ap, params=params)
     reqs = make_trace(10, mean_in=12, mean_out=8, rate=3.0,
                       vocab=cfg.vocab_size, seed=1)
     done = sched.run(reqs)

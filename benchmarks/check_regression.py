@@ -11,6 +11,8 @@ baselines and fail on drift.
          --fresh-disagg BENCH_disagg.json] \\
         [--baseline-faults base/BENCH_faults.json \\
          --fresh-faults BENCH_faults.json] \\
+        [--baseline-router base/BENCH_router.json \\
+         --fresh-router BENCH_router.json] \\
         [--threshold 0.25]
 
 What is compared (chosen to be meaningful on shared CI runners):
@@ -41,6 +43,12 @@ What is compared (chosen to be meaningful on shared CI runners):
   (goodput fraction, retries, re-prefills, quarantines, sheds) are
   gated here so a recovery-path change cannot silently alter the
   fault response.
+* ``BENCH_router.json`` (optional) — placement-policy A/B per
+  (trace, policy) cell on the 2-replica fleet.  Placement runs on the
+  shared logical clock, so per-replica placements, load imbalance, and
+  the merged step-domain fleet metrics are deterministic; the bursty
+  ``ttft_aware`` <= ``round_robin`` tail-TTFT ordering is asserted
+  inside the bench itself.
 
 Exit code 1 with a per-field report when any check trips.
 """
@@ -78,6 +86,15 @@ FAULT_FIELDS = ("goodput_frac", "goodput_tok_per_step", "ttft_steps_p99",
                 "steps", "total_new_tokens", "completed", "shed_requests",
                 "wasted_tokens", "handoff_retries", "handoff_reprefills",
                 "quarantines")
+# Router A/B cells: placement is a pure function of the shared logical
+# clock, so per-replica placements and the merged step-domain fleet
+# metrics are deterministic.  A policy change that shifts traffic or
+# degrades tail TTFT must show here (the bursty ttft_aware <= round_robin
+# ordering itself is asserted inside the bench).
+ROUTER_FIELDS = ("ttft_steps_p50", "ttft_steps_p99", "tpot_steps_p50",
+                 "steps", "total_new_tokens", "completed",
+                 "goodput_tok_per_step", "placements_0", "placements_1",
+                 "load_imbalance")
 # Regret on CPU runners is noisy; gate the mean with extra absolute slack.
 REGRET_ABS_SLACK = 0.5
 
@@ -109,6 +126,10 @@ def _disagg_key(row: Dict) -> tuple:
 
 def _fault_key(row: Dict) -> tuple:
     return (row.get("trace"), row.get("rate"))
+
+
+def _router_key(row: Dict) -> tuple:
+    return (row.get("trace"), row.get("policy"))
 
 
 def _check_rows(base_rows: List[Dict], fresh_rows: List[Dict], key_fn,
@@ -185,6 +206,8 @@ def main(argv=None) -> int:
     p.add_argument("--fresh-disagg", default=None)
     p.add_argument("--baseline-faults", default=None)
     p.add_argument("--fresh-faults", default=None)
+    p.add_argument("--baseline-router", default=None)
+    p.add_argument("--fresh-router", default=None)
     p.add_argument("--threshold", type=float, default=0.25,
                    help="max allowed relative drift (default 0.25)")
     args = p.parse_args(argv)
@@ -207,6 +230,10 @@ def main(argv=None) -> int:
         _check_rows(_load(args.baseline_faults)["rows"],
                     _load(args.fresh_faults)["rows"], _fault_key,
                     FAULT_FIELDS, args.threshold, "faults", failures)
+    if args.baseline_router and args.fresh_router:
+        _check_rows(_load(args.baseline_router)["rows"],
+                    _load(args.fresh_router)["rows"], _router_key,
+                    ROUTER_FIELDS, args.threshold, "router", failures)
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)} violations):")

@@ -12,7 +12,8 @@ import jax
 
 from repro.models.common import ModelConfig
 from repro.models.transformer import make_plan, init_params
-from repro.inference.scheduler import ContinuousBatcher, make_trace
+from repro.inference.scheduler import make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 
 M100 = ModelConfig(  # ~100M params
     name="llama-100m", family="dense", n_layers=8, d_model=512,
@@ -35,8 +36,11 @@ def main():
     ap = make_plan(cfg, 1)
     params = init_params(jax.random.PRNGKey(0), ap)
     # paged KV cache (16-token blocks) + recompile-free chunked admission
-    sched = ContinuousBatcher(ap, params, slots=args.slots, s_max=192,
-                              block_size=16, admit_mode="chunked")
+    # (arch is nominal: ap/params for the demo model are passed explicitly)
+    sched = build_replica(
+        ReplicaSpec(arch="llama3.2-1b", slots=args.slots, s_max=192,
+                    block_size=16, admit_mode="chunked"),
+        ap=ap, params=params)
     reqs = make_trace(args.requests, mean_in=24, mean_out=16, rate=4.0,
                       vocab=cfg.vocab_size, seed=0)
     done = sched.run(reqs)

@@ -6,7 +6,11 @@ from .engine import InferenceEngine, GenerationResult
 from .disagg import DisaggCoordinator, DisaggMetrics, PrefillPool
 from .kv_cache import (BlockAllocator, CacheStats, KVBundle, export_slot,
                        heads_to_slots, paged_geometry, slots_to_heads)
+from .router import Router, RouterMetrics, ReplicaLoad
 from .scheduler import ContinuousBatcher, Request, ServeMetrics, make_trace
+from .spec import (ReplicaSpec, ServeSpec, SpecError, ROUTER_POLICIES,
+                   build_engine, build_prefill_pool, build_replica,
+                   make_injector)
 from .speculative import (AdaptiveK, Drafter, ModelDrafter, NGramDrafter,
                           ReplayDrafter, make_drafter)
 from .simulator import (ChipSpec, A100, GH200, V5E, ClusterSim,
@@ -19,4 +23,7 @@ __all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
            "Drafter", "NGramDrafter", "ModelDrafter", "ReplayDrafter",
            "AdaptiveK", "make_drafter", "DisaggCoordinator",
            "DisaggMetrics", "PrefillPool", "KVBundle", "export_slot",
-           "slots_to_heads", "heads_to_slots"]
+           "slots_to_heads", "heads_to_slots", "Router", "RouterMetrics",
+           "ReplicaLoad", "ReplicaSpec", "ServeSpec", "SpecError",
+           "ROUTER_POLICIES", "build_engine", "build_prefill_pool",
+           "build_replica", "make_injector"]

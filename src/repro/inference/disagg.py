@@ -295,9 +295,74 @@ class DisaggMetrics:
     prefill_stall_steps: int = 0
     decode_stall_steps: int = 0
     ready_cap: int = 0
+    # Retained per-request latency samples (logical steps) for lossless
+    # fleet aggregation — see ``ServeMetrics.merge``.  Excluded from
+    # ``to_dict`` so bench JSON rows stay scalar-only.
+    ttft_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+    prefill_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+    transfer_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+    tpot_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+
+    SAMPLE_FIELDS = ("ttft_steps_samples", "prefill_steps_samples",
+                     "transfer_steps_samples", "tpot_steps_samples")
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        for k in self.SAMPLE_FIELDS:
+            d.pop(k, None)
+        return d
+
+    @classmethod
+    def merge(cls, parts: List["DisaggMetrics"]) -> "DisaggMetrics":
+        """Lossless fleet aggregation over per-replica disagg metrics:
+        counters/totals summed, percentiles recomputed from retained
+        samples, ``steps``/``wall_s`` max (lockstep logical clock), queue
+        peaks max (worst replica — per-replica queues peak at different
+        ticks, so summing would overstate), AR buckets max, per-pool
+        stat dicts dropped (per-replica detail stays with the router)."""
+        if not parts:
+            raise ValueError("merge() needs at least one DisaggMetrics")
+        ttft = [s for m in parts for s in m.ttft_steps_samples]
+        pre = [s for m in parts for s in m.prefill_steps_samples]
+        xfer = [s for m in parts for s in m.transfer_steps_samples]
+        tpot = [s for m in parts for s in m.tpot_steps_samples]
+        wall = max(m.wall_s for m in parts)
+        total_new = sum(m.total_new_tokens for m in parts)
+        return cls(
+            requests=sum(m.requests for m in parts),
+            completed=sum(m.completed for m in parts),
+            total_new_tokens=total_new,
+            steps=max(m.steps for m in parts), wall_s=wall,
+            throughput_tok_s=total_new / wall if wall > 0 else 0.0,
+            ttft_steps_p50=_percentile(ttft, 50),
+            ttft_steps_p99=_percentile(ttft, 99),
+            prefill_steps_p50=_percentile(pre, 50),
+            transfer_steps_p50=_percentile(xfer, 50),
+            tpot_steps_p50=_percentile(tpot, 50),
+            tpot_steps_p99=_percentile(tpot, 99),
+            preemptions=sum(m.preemptions for m in parts),
+            handoffs=sum(m.handoffs for m in parts),
+            transfer_bytes=sum(m.transfer_bytes for m in parts),
+            peak_ready_depth=max(m.peak_ready_depth for m in parts),
+            peak_pending_depth=max(m.peak_pending_depth for m in parts),
+            prefill_ar_bucket=max(m.prefill_ar_bucket for m in parts),
+            decode_ar_bucket=max(m.decode_ar_bucket for m in parts),
+            prefill_pool={}, decode_pool={},
+            handoff_drops=sum(m.handoff_drops for m in parts),
+            handoff_retries=sum(m.handoff_retries for m in parts),
+            handoff_corrupt=sum(m.handoff_corrupt for m in parts),
+            handoff_reprefills=sum(m.handoff_reprefills for m in parts),
+            shed_requests=sum(m.shed_requests for m in parts),
+            backpressure_steps=sum(m.backpressure_steps for m in parts),
+            prefill_stall_steps=sum(m.prefill_stall_steps for m in parts),
+            decode_stall_steps=sum(m.decode_stall_steps for m in parts),
+            ready_cap=max(m.ready_cap for m in parts),
+            ttft_steps_samples=ttft, prefill_steps_samples=pre,
+            transfer_steps_samples=xfer, tpot_steps_samples=tpot)
 
 
 class DisaggCoordinator:
@@ -370,6 +435,13 @@ class DisaggCoordinator:
         self.decode_stall_steps = 0
         self._shed: List[Request] = []
         self._reprefills: Dict[int, int] = {}   # rid -> re-prefill count
+        # cross-tick queue state (reset by begin_run): an external driver
+        # (run(), or inference.router.Router) owns the pending-prompt
+        # list and passes it per tick; the handoff queue and the
+        # per-request attempt/prefill counters live here
+        self._ready: List[_Handoff] = []   # awaiting a decode slot
+        self._attempt_no: Dict[int, int] = {}  # rid -> transfer attempts
+        self._prefill_no: Dict[int, int] = {}  # rid -> prefills, ever
 
     def _shed_req(self, req: Request, now: float, reason: str) -> None:
         """Drop a never-admitted request, *reporting* it (shed_reason /
@@ -400,6 +472,144 @@ class DisaggCoordinator:
         self.handoff_reprefills += 1
         pending.insert(0, h.req)
 
+    def begin_run(self) -> None:
+        """Reset all per-run state (records, counters, queues, pool
+        stats) ahead of a trace replay — called by :meth:`run`, and by an
+        external driver (``inference.router.Router``) before it starts
+        ticking this coordinator directly."""
+        self._records = {}
+        self.transfer_bytes = 0
+        self.handoffs = 0
+        self.peak_ready = 0
+        self.peak_pending = 0
+        self.handoff_drops = self.handoff_retries = 0
+        self.handoff_corrupt = self.handoff_reprefills = 0
+        self.backpressure_steps = 0
+        self.prefill_stall_steps = self.decode_stall_steps = 0
+        self._shed = []
+        self._reprefills = {}
+        self._ready = []
+        self._attempt_no = {}
+        self._prefill_no = {}
+        self.decode.reset_run_stats()
+        self.prefill.reset_stats()
+
+    def _tick_pre(self, pending: List[Request], now: float) -> None:
+        """Tick phases ahead of the decode step: deadline sheds, the
+        prefill phase (stall-checked even when there is nothing to
+        prefill — a stall is a property of the tick, not the queue), and
+        the handoff drain into free decode slots.  ``pending`` is the
+        externally-owned prompt queue, mutated in place."""
+        inj = self.injector
+        decode = self.decode
+        ready = self._ready
+        # deadline shedding: never-admitted requests only (a preempted
+        # decode context already emitted its first token — protected)
+        for r in [r for r in pending
+                  if now - r.arrival_s > self._deadline(r)]:
+            self._shed_req(r, now, "deadline")
+            pending.remove(r)
+        for h in [h for h in ready
+                  if now - h.req.arrival_s > self._deadline(h.req)]:
+            self._shed_req(h.req, now, "deadline")
+            ready.remove(h)
+        if inj is not None and inj.prefill_stalled(now):
+            self.prefill_stall_steps += 1
+        else:
+            for _ in range(self.prefill_per_step):
+                if not pending:
+                    break
+                if len(ready) >= self.max_ready:
+                    # bounded handoff queue: hold the prompt instead
+                    # of growing ready without bound
+                    self.backpressure_steps += 1
+                    break
+                req = pending.pop(0)
+                n = self._prefill_no.get(req.rid, 0)
+                self._prefill_no[req.rid] = n + 1
+                tok, bundle = self.prefill.prefill(req)
+                if inj is not None and \
+                        inj.corrupt_handoff(req.rid, n):
+                    FaultInjector.corrupt_bundle(bundle)
+                rec = self._records.setdefault(
+                    req.rid, {"arrival": req.arrival_s})
+                rec["prefill_step"] = now
+                self.handoffs += 1
+                self.transfer_bytes += bundle.nbytes
+                ready.append(_Handoff(req, tok, bundle, prefill_no=n))
+        # handoff queue -> free decode slots, FIFO among *due* entries
+        # (retry backoff defers an entry without starving the rest);
+        # a bundle that does not fit the paged pool right now stays
+        # queued (head-of-line: admitting out of order would starve
+        # the oldest context)
+        for s in range(decode.slots):
+            if decode.active[s] is not None:
+                continue
+            h = next((h for h in ready if h.next_try <= now), None)
+            if h is None:
+                continue
+            a = self._attempt_no.get(h.req.rid, 0)
+            self._attempt_no[h.req.rid] = a + 1
+            if inj is not None and inj.drop_handoff(h.req.rid, a):
+                # transfer attempt lost in flight
+                self.handoff_drops += 1
+                h.attempts += 1
+                if h.attempts > self.max_handoff_retries:
+                    ready.remove(h)
+                    self._reprefill_or_shed(h, pending, now,
+                                            "handoff_failed")
+                else:
+                    self.handoff_retries += 1
+                    h.next_try = now + self.retry_backoff * h.attempts
+                continue
+            try:
+                ok = decode.admit_prefilled(s, h.req, h.bundle,
+                                            h.tok, now)
+            except BundleIntegrityError:
+                # splice-time checksum mismatch: the payload itself is
+                # bad — retrying the same bundle can never succeed
+                self.handoff_corrupt += 1
+                ready.remove(h)
+                self._reprefill_or_shed(h, pending, now,
+                                        "handoff_corrupt")
+                continue
+            if ok:
+                ready.remove(h)
+                self._records[h.req.rid]["handoff_step"] = now
+        self.peak_ready = max(self.peak_ready, len(ready))
+        self.peak_pending = max(self.peak_pending, len(pending))
+
+    def _tick_decode(self, pending: List[Request], now: float) -> None:
+        """Decode phase of one tick: one decode-pool step (unless
+        stalled), then reroute decode-pool preemptions back to the front
+        of the prompt queue for recompute."""
+        inj = self.injector
+        decode = self.decode
+        if inj is not None and inj.decode_stalled(now):
+            self.decode_stall_steps += 1
+        else:
+            decode.step(now)
+        # a preempted decode context lost its KV: route it back to the
+        # prefill pool for recompute (front of queue, preserving the
+        # eviction order — the colocated batcher's requeue-first rule)
+        if decode._requeue:
+            pending[:0] = decode._requeue
+            decode._requeue.clear()
+
+    def tick(self, arrived: List[Request], now: float) -> None:
+        """One full logical tick on an externally-owned prompt queue —
+        the ``ContinuousBatcher.tick`` contract, so a router drives a
+        colocated batcher and a disagg coordinator identically.  (The
+        trailing drained tick is harmless: both phases no-op on empty
+        queues, matching the batcher's no-op ``step``.)"""
+        self._tick_pre(arrived, now)
+        self._tick_decode(arrived, now)
+
+    def drained(self, arrived: List[Request]) -> bool:
+        """No queued, in-flight, or active work left for this replica."""
+        return not arrived and not self._ready \
+            and all(a is None for a in self.decode.active)
+
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
         """Replay a trace (same contract as ``ContinuousBatcher.run``).
@@ -417,119 +627,19 @@ class DisaggCoordinator:
         qi = 0
         now = 0.0
         pending: List[Request] = []   # awaiting prefill
-        ready: List[_Handoff] = []    # awaiting a decode slot
-        attempt_no: Dict[int, int] = {}   # rid -> transfer attempts, ever
-        prefill_no: Dict[int, int] = {}   # rid -> prefills, ever
-        self._records = {}
-        self.transfer_bytes = 0
-        self.handoffs = 0
-        self.peak_ready = 0
-        self.peak_pending = 0
-        self.handoff_drops = self.handoff_retries = 0
-        self.handoff_corrupt = self.handoff_reprefills = 0
-        self.backpressure_steps = 0
-        self.prefill_stall_steps = self.decode_stall_steps = 0
-        self._shed = []
-        self._reprefills = {}
-        inj = self.injector
-        decode = self.decode
-        decode.reset_run_stats()
-        self.prefill.reset_stats()
+        self.begin_run()
         wall0 = time.perf_counter()
         for _ in range(max_steps):
             while qi < len(waiting) and waiting[qi].arrival_s <= now:
                 pending.append(waiting[qi])
                 qi += 1
-            # deadline shedding: never-admitted requests only (a preempted
-            # decode context already emitted its first token — protected)
-            for r in [r for r in pending
-                      if now - r.arrival_s > self._deadline(r)]:
-                self._shed_req(r, now, "deadline")
-                pending.remove(r)
-            for h in [h for h in ready
-                      if now - h.req.arrival_s > self._deadline(h.req)]:
-                self._shed_req(h.req, now, "deadline")
-                ready.remove(h)
-            if inj is not None and inj.prefill_stalled(now):
-                self.prefill_stall_steps += 1
-            else:
-                for _ in range(self.prefill_per_step):
-                    if not pending:
-                        break
-                    if len(ready) >= self.max_ready:
-                        # bounded handoff queue: hold the prompt instead
-                        # of growing ready without bound
-                        self.backpressure_steps += 1
-                        break
-                    req = pending.pop(0)
-                    n = prefill_no.get(req.rid, 0)
-                    prefill_no[req.rid] = n + 1
-                    tok, bundle = self.prefill.prefill(req)
-                    if inj is not None and \
-                            inj.corrupt_handoff(req.rid, n):
-                        FaultInjector.corrupt_bundle(bundle)
-                    rec = self._records.setdefault(
-                        req.rid, {"arrival": req.arrival_s})
-                    rec["prefill_step"] = now
-                    self.handoffs += 1
-                    self.transfer_bytes += bundle.nbytes
-                    ready.append(_Handoff(req, tok, bundle, prefill_no=n))
-            # handoff queue -> free decode slots, FIFO among *due* entries
-            # (retry backoff defers an entry without starving the rest);
-            # a bundle that does not fit the paged pool right now stays
-            # queued (head-of-line: admitting out of order would starve
-            # the oldest context)
-            for s in range(decode.slots):
-                if decode.active[s] is not None:
-                    continue
-                h = next((h for h in ready if h.next_try <= now), None)
-                if h is None:
-                    continue
-                a = attempt_no.get(h.req.rid, 0)
-                attempt_no[h.req.rid] = a + 1
-                if inj is not None and inj.drop_handoff(h.req.rid, a):
-                    # transfer attempt lost in flight
-                    self.handoff_drops += 1
-                    h.attempts += 1
-                    if h.attempts > self.max_handoff_retries:
-                        ready.remove(h)
-                        self._reprefill_or_shed(h, pending, now,
-                                                "handoff_failed")
-                    else:
-                        self.handoff_retries += 1
-                        h.next_try = now + self.retry_backoff * h.attempts
-                    continue
-                try:
-                    ok = decode.admit_prefilled(s, h.req, h.bundle,
-                                                h.tok, now)
-                except BundleIntegrityError:
-                    # splice-time checksum mismatch: the payload itself is
-                    # bad — retrying the same bundle can never succeed
-                    self.handoff_corrupt += 1
-                    ready.remove(h)
-                    self._reprefill_or_shed(h, pending, now,
-                                            "handoff_corrupt")
-                    continue
-                if ok:
-                    ready.remove(h)
-                    self._records[h.req.rid]["handoff_step"] = now
-            self.peak_ready = max(self.peak_ready, len(ready))
-            self.peak_pending = max(self.peak_pending, len(pending))
-            if qi >= len(waiting) and not pending and not ready \
-                    and all(a is None for a in decode.active):
+            self._tick_pre(pending, now)
+            if qi >= len(waiting) and self.drained(pending):
                 break
-            if inj is not None and inj.decode_stalled(now):
-                self.decode_stall_steps += 1
-            else:
-                decode.step(now)
-            # a preempted decode context lost its KV: route it back to the
-            # prefill pool for recompute (front of queue, preserving the
-            # eviction order — the colocated batcher's requeue-first rule)
-            if decode._requeue:
-                pending[:0] = decode._requeue
-                decode._requeue.clear()
+            self._tick_decode(pending, now)
             now += 1.0
         self._wall = time.perf_counter() - wall0
+        decode = self.decode
         decode._wall_run = self._wall
         return requests
 
@@ -598,7 +708,10 @@ class DisaggCoordinator:
             backpressure_steps=self.backpressure_steps,
             prefill_stall_steps=self.prefill_stall_steps,
             decode_stall_steps=self.decode_stall_steps,
-            ready_cap=self.max_ready)
+            ready_cap=self.max_ready,
+            ttft_steps_samples=ttft, prefill_steps_samples=pre,
+            transfer_steps_samples=xfer,
+            tpot_steps_samples=list(dm.tpot_steps_samples))
 
 
 __all__ = ["PrefillPool", "DisaggCoordinator", "DisaggMetrics",

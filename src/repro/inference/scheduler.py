@@ -215,9 +215,86 @@ class ServeMetrics:
     spec_autodisables: int = 0
     straggler_steps: int = 0
     wasted_tokens: int = 0
+    # Retained per-request latency samples (logical steps) so a fleet
+    # aggregation can recompute exact percentiles instead of averaging
+    # per-replica p99s (see :meth:`merge`).  Excluded from ``to_dict`` —
+    # bench JSON rows stay scalar-only.
+    ttft_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+    tpot_steps_samples: List[float] = dataclasses.field(
+        default_factory=list, repr=False)
+
+    SAMPLE_FIELDS = ("ttft_steps_samples", "tpot_steps_samples")
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        for k in self.SAMPLE_FIELDS:
+            d.pop(k, None)
+        return d
+
+    @classmethod
+    def merge(cls, parts: List["ServeMetrics"]) -> "ServeMetrics":
+        """Lossless fleet aggregation over per-replica metrics.
+
+        Counters and token totals are summed; TTFT/TPOT percentiles are
+        **recomputed from the retained samples** (a mean/max of
+        per-replica p99s is not a fleet p99 — the average-of-averages
+        bug this method exists to avoid); ``steps``/``wall_s`` take the
+        max because replicas advance in lockstep on one shared logical
+        clock; footprints sum (a fleet reserves every replica's cache);
+        ratio fields are recomputed from the summed numerators and
+        denominators.  ``cache_stats`` is dropped (per-replica detail —
+        the router keeps the unmerged parts alongside)."""
+        if not parts:
+            raise ValueError("merge() needs at least one ServeMetrics")
+        ttft = [s for m in parts for s in m.ttft_steps_samples]
+        tpot = [s for m in parts for s in m.tpot_steps_samples]
+        steps = max(m.steps for m in parts)
+        wall = max(m.wall_s for m in parts)
+        step_s = wall / steps if steps else 0.0
+        total_new = sum(m.total_new_tokens for m in parts)
+        drafted = sum(m.drafted_tokens for m in parts)
+        accepted = sum(m.accepted_tokens for m in parts)
+        spec_steps = sum(m.spec_steps for m in parts)
+        peak = sum(m.peak_kv_tokens for m in parts)
+        # sum of per-replica occupied peaks over sum of reserved peaks
+        occupied = sum(m.cache_utilization * m.peak_kv_tokens
+                       for m in parts)
+        wsum = lambda f: sum(getattr(m, f) * m.spec_steps for m in parts)
+        return cls(
+            requests=sum(m.requests for m in parts),
+            completed=sum(m.completed for m in parts),
+            total_new_tokens=total_new, steps=steps, wall_s=wall,
+            throughput_tok_s=total_new / wall if wall > 0 else 0.0,
+            ttft_steps_p50=_percentile(ttft, 50),
+            ttft_steps_p99=_percentile(ttft, 99),
+            tpot_steps_p50=_percentile(tpot, 50),
+            tpot_steps_p99=_percentile(tpot, 99),
+            ttft_s_p50=_percentile(ttft, 50) * step_s,
+            ttft_s_p99=_percentile(ttft, 99) * step_s,
+            tpot_s_p50=_percentile(tpot, 50) * step_s,
+            tpot_s_p99=_percentile(tpot, 99) * step_s,
+            preemptions=sum(m.preemptions for m in parts),
+            peak_kv_tokens=peak,
+            kv_capacity_tokens=sum(m.kv_capacity_tokens for m in parts),
+            cache_utilization=occupied / peak if peak else 0.0,
+            cache_stats=None,
+            spec_steps=spec_steps,
+            drafted_tokens=drafted, accepted_tokens=accepted,
+            acceptance_rate=accepted / drafted if drafted else 0.0,
+            accepted_tokens_per_step=accepted / spec_steps
+            if spec_steps else 0.0,
+            drafter_hit_rate=wsum("drafter_hit_rate") / spec_steps
+            if spec_steps else 0.0,
+            spec_k_mean=wsum("spec_k_mean") / spec_steps
+            if spec_steps else 0.0,
+            quarantines=sum(m.quarantines for m in parts),
+            injected_oom=sum(m.injected_oom for m in parts),
+            shed_requests=sum(m.shed_requests for m in parts),
+            spec_autodisables=sum(m.spec_autodisables for m in parts),
+            straggler_steps=sum(m.straggler_steps for m in parts),
+            wasted_tokens=sum(m.wasted_tokens for m in parts),
+            ttft_steps_samples=ttft, tpot_steps_samples=tpot)
 
 
 class ContinuousBatcher:
@@ -377,6 +454,10 @@ class ContinuousBatcher:
         self._wall_run = 0.0     # wall seconds of the last run(), at drain
         self._peak_occupied = 0  # max sum of live positions, in tokens
         self._requeue: List[Request] = []   # preempted, awaiting re-admission
+        # evictions this run, counted at the batcher so the dense layout
+        # reports them too (the allocator's counter only exists when
+        # paged; the two agree on the paged path — asserted in metrics())
+        self._preemptions = 0
         # -- robustness state (DESIGN.md §11) --------------------------------
         self.injector = injector
         self.deadline_s = deadline_s
@@ -547,6 +628,7 @@ class ContinuousBatcher:
             self._scrub_slot(slot)
         req = self.active[slot]
         req.preempted += 1
+        self._preemptions += 1
         self._wasted_tokens += len(self.outputs[req.rid])
         del self.outputs[req.rid]
         self.active[slot] = None
@@ -865,6 +947,7 @@ class ContinuousBatcher:
         self._quarantines = self._injected_oom = 0
         self._straggler_steps = self._spec_autodisables = 0
         self._wasted_tokens = 0
+        self._preemptions = 0
         self._shed = []
         self._spec_deny = set()
         self._spec_zero_acc[:] = 0
@@ -892,6 +975,37 @@ class ContinuousBatcher:
             d = min(d, self.deadline_s)
         return d
 
+    def tick(self, arrived: List[Request], now: float) -> None:
+        """One logical scheduling tick over an externally-owned queue of
+        due arrivals (mutated in place): shed deadline-expired entries,
+        admit (preempted requeue first, then arrivals, FCFS), and run one
+        engine step.  ``run`` drives this on its private queue; an
+        external driver (``inference.router.Router``) owns a per-replica
+        queue and calls this directly — one code path, so a routed
+        replica schedules exactly like a standalone batcher."""
+        expired = [r for r in arrived
+                   if now - r.arrival_s > self._deadline(r)]
+        for r in expired:
+            self._shed_req(r, now, "deadline")
+            arrived.remove(r)
+        # admit preempted requests first, then due arrivals
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                continue
+            if self._requeue:
+                if self._admit(s, self._requeue[0], now):
+                    self._requeue.pop(0)
+                continue
+            if arrived:
+                if self._admit(s, arrived[0], now):
+                    arrived.pop(0)
+        self.step(now)
+
+    def drained(self, arrived: List[Request]) -> bool:
+        """No queued, requeued, or active work left for this batcher."""
+        return not arrived and not self._requeue \
+            and all(a is None for a in self.active)
+
     def run(self, requests: List[Request],
             max_steps: int = 100000) -> List[Request]:
         """Replay a trace (requests sorted by arrival) to completion.
@@ -912,26 +1026,9 @@ class ContinuousBatcher:
             while qi < len(waiting) and waiting[qi].arrival_s <= now:
                 arrived.append(waiting[qi])
                 qi += 1
-            expired = [r for r in arrived
-                       if now - r.arrival_s > self._deadline(r)]
-            for r in expired:
-                self._shed_req(r, now, "deadline")
-                arrived.remove(r)
-            # admit preempted requests first, then due arrivals
-            for s in range(self.slots):
-                if self.active[s] is not None:
-                    continue
-                if self._requeue:
-                    if self._admit(s, self._requeue[0], now):
-                        self._requeue.pop(0)
-                    continue
-                if arrived:
-                    if self._admit(s, arrived[0], now):
-                        arrived.pop(0)
-            if qi >= len(waiting) and not arrived and not self._requeue \
-                    and all(a is None for a in self.active):
+            if qi >= len(waiting) and self.drained(arrived):
                 break
-            self.step(now)
+            self.tick(arrived, now)
             now += 1.0  # logical step clock
         self._wall_run = time.perf_counter() - self._wall0
         return requests
@@ -969,14 +1066,19 @@ class ContinuousBatcher:
             peak_tok = st.peak_used_blocks * st.block_size
             cap = (st.n_blocks - 1) * st.block_size
             util = self._peak_occupied / peak_tok if peak_tok else 0.0
-            preempt = st.preemptions
+            # every eviction goes through _evict -> alloc.preempt, so the
+            # two counters can only disagree on a bookkeeping bug
+            assert st.preemptions == self._preemptions, \
+                (st.preemptions, self._preemptions)
             cache_stats = st.to_dict()
         else:
             # dense reserves worst case up front regardless of occupancy
             peak_tok = cap = self.slots * self.s_max
             util = self._peak_occupied / cap if cap else 0.0
-            preempt = 0
             cache_stats = None
+        # counted at the batcher, not the allocator: dense-layout
+        # evictions (quarantine / injected OOM) used to report as 0
+        preempt = self._preemptions
         return ServeMetrics(
             requests=len(requests), completed=len(done),
             total_new_tokens=total_new, steps=self.steps_run, wall_s=wall,
@@ -1008,7 +1110,8 @@ class ContinuousBatcher:
             shed_requests=len(self._shed),
             spec_autodisables=self._spec_autodisables,
             straggler_steps=self._straggler_steps,
-            wasted_tokens=self._wasted_tokens)
+            wasted_tokens=self._wasted_tokens,
+            ttft_steps_samples=ttft, tpot_steps_samples=tpot)
 
 
 def make_trace(n_requests: int, *, mean_in: int, mean_out: int,

@@ -1,6 +1,6 @@
 """Serving driver: batched generation, trace-replay continuous batching,
-or disaggregated prefill/decode pools (see docs/serving.md for the full
-flag reference).
+disaggregated prefill/decode pools, or a multi-replica routed fleet (see
+docs/serving.md for the full flag reference).
 
     python -m repro.launch.serve --arch llama3.2-1b --smoke --mode batch
     python -m repro.launch.serve --arch llama3.2-1b --smoke --mode trace \
@@ -12,6 +12,15 @@ flag reference).
     python -m repro.launch.serve --arch llama3.2-1b --mode trace --disagg \
         --prefill-tp 8 --prefill-pods 2 --decode-tp 4 --block-size 8
         # disaggregated pools (DESIGN.md §9); per-pool mesh + ar_table
+    python -m repro.launch.serve --arch llama3.2-1b --mode trace \
+        --replicas 2 --tp 4 --router-policy ttft_aware
+        # multi-replica router (DESIGN.md §13); disjoint mesh per replica
+
+Every deployment is described by a :class:`~repro.inference.ServeSpec`
+(``ServeSpec.from_args``): one validated, JSON-round-trippable value
+that the factories (``build_engine`` / ``build_replica``) and the router
+construct from — the CLI, tests, and benchmarks share one construction
+path and reject invalid combos identically.
 
 Trace mode replays a BurstGPT-style synthetic trace through the
 continuous batcher (local path, or the mesh path when --tp > 1) and
@@ -25,33 +34,30 @@ seconds (steps x measured mean step time), plus cache utilization and
 preemption counts from the paged KV allocator.  With ``--disagg`` the
 TTFT is attributed to the prefill pool + handoff transfer, TPOT to the
 decode pool, and each pool reports its own all-reduce message-size
-buckets.
+buckets.  With ``--replicas N`` the trace is load-balanced over N
+self-contained replicas and the report adds placement counts, load
+imbalance, and the lossless fleet metric merge.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
-import time
 
 import jax
 import numpy as np
 
 from ..configs import get_config, get_smoke, ARCH_IDS
-from ..core.pcontext import (ParallelCtx, LOCAL, AR_STRATEGIES,
-                             SEQ_PARALLEL_MODES)
-from ..models.transformer import make_plan, init_params
-from ..inference.engine import InferenceEngine
-from ..inference.faults import FaultInjector, FaultPlan
-from ..inference.scheduler import ContinuousBatcher, make_trace
+from ..core.pcontext import AR_STRATEGIES, SEQ_PARALLEL_MODES
+from ..inference.router import Router
+from ..inference.scheduler import make_trace
+from ..inference.spec import (ROUTER_POLICIES, ServeSpec, SpecError,
+                              build_engine, build_replica)
 
 
-def _make_injector(fault_plan):
-    """``--fault-plan`` -> FaultInjector (None when absent): a ``k=v,...``
-    string or a JSON file path (``FaultPlan.parse``)."""
-    if fault_plan is None:
-        return None
-    return FaultInjector(FaultPlan.parse(fault_plan))
+def _cfg(spec: ServeSpec):
+    r = spec.replica
+    return get_smoke(r.arch) if r.smoke else get_config(r.arch)
 
 
 def _check_outcomes(done, injector, deadline_ms):
@@ -78,52 +84,24 @@ def _print_faults(m, injector, shed):
         print(f"[serve]   shed {len(shed)} request(s): {reasons}")
 
 
-def _mesh_and_ctx(tp: int, pods: int, ar_strategy: str, overlap: bool,
-                  seq_parallel: str = "off", ar_quant: str = "none"):
-    """(mesh, ctx, tp_total) for the requested layout; local when tp == 1."""
-    ctx = LOCAL.replace(ar_strategy=ar_strategy, overlap_matmul=overlap,
-                        seq_parallel=seq_parallel, ar_quant=ar_quant)
-    if tp <= 1:
-        return None, ctx, 1
-    from ..core.compat import AxisType, make_mesh
-    if pods > 1:
-        if tp % pods:
-            raise SystemExit(f"--tp {tp} not divisible by --pods {pods}")
-        mesh = make_mesh((pods, tp // pods), ("pod", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
-        ctx = ctx.replace(tp_fast=("model",), tp_slow=("pod",),
-                          ep=("model",))
-    else:
-        mesh = make_mesh((tp,), ("model",), axis_types=(AxisType.Auto,))
-        ctx = ctx.replace(tp_fast=("model",), ep=("model",))
-    return mesh, ctx, tp
+def _write_json(m, json_out):
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(m.to_dict(), f, indent=2, default=float)
+        print(f"[serve]   metrics -> {json_out}")
 
 
-def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
-              prompt_len: int = 16, max_new: int = 16,
-              ar_strategy: str = "flat", ar_table=None, overlap: bool = False,
-              seq_parallel: str = "off", ar_quant: str = "none",
-              temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-              tp: int = 1, pods: int = 1, block_size: int = 0,
-              spec_mode=None, spec_k: int = 4,
-              draft_arch: str = "llama3.2-1b"):
-    cfg = get_smoke(arch) if smoke else get_config(arch)
-    if block_size and tp > 1:
-        raise SystemExit("--block-size with --mode batch is local-path "
-                         "only (use --mode trace for mesh-path paging)")
-    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
-                                  seq_parallel, ar_quant)
-    ap = make_plan(cfg, tp)
-    params = init_params(jax.random.PRNGKey(seed), ap)
+def run_batch(spec: ServeSpec, *, batch: int = 4, prompt_len: int = 16,
+              max_new: int = 16):
+    """Batched generation through :func:`build_engine` (DESIGN.md §13:
+    the spec is the only construction path)."""
+    r = spec.replica
+    cfg = _cfg(spec)
     s_max = prompt_len + max_new + 8
-    if block_size:
-        s_max = -(-s_max // block_size) * block_size
-    eng = InferenceEngine(ap, params, ctx=ctx, mesh=mesh, s_max=s_max,
-                          temperature=temperature, top_k=top_k, seed=seed,
-                          block_size=block_size, ar_table=ar_table,
-                          spec_mode=spec_mode, spec_k=spec_k,
-                          draft_arch=draft_arch)
-    rng = np.random.default_rng(seed)
+    if r.block_size:
+        s_max = -(-s_max // r.block_size) * r.block_size
+    eng = build_engine(r.replace(s_max=s_max))
+    rng = np.random.default_rng(r.seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len))
     extra = {}
     if cfg.family == "encdec":
@@ -135,57 +113,26 @@ def run_batch(arch: str, *, smoke: bool = True, batch: int = 4,
             rng.standard_normal((batch, cfg.n_patches, cfg.d_model)),
             cfg.dtype)
     res = eng.generate(prompts, max_new, extra=extra)
-    layout = f"paged(bs={block_size})" if block_size else "dense"
-    spec = f" spec={spec_mode}(k={spec_k})" if spec_mode else ""
-    print(f"[serve] {arch}: batch {batch} prompt {prompt_len} "
-          f"new {max_new} ar={ar_strategy} tp={tp} {layout}{spec} "
+    layout = f"paged(bs={r.block_size})" if r.block_size else "dense"
+    sp = f" spec={r.spec_mode}(k={r.spec_k})" if r.spec_mode else ""
+    print(f"[serve] {r.arch}: batch {batch} prompt {prompt_len} "
+          f"new {max_new} ar={r.ar_strategy} tp={r.tp} {layout}{sp} "
           f"| prefill {res.prefill_s*1e3:.0f}ms "
           f"decode {res.decode_s*1e3:.0f}ms "
           f"({res.decode_tokens_per_s:.0f} tok/s, {res.steps} steps)")
     return res
 
 
-def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
-              slots: int = 4, s_max: int = 128, block_size: int = 0,
-              n_blocks=None, ar_strategy: str = "flat", ar_table=None,
-              overlap: bool = False, seq_parallel: str = "off",
-              ar_quant: str = "none", kv_quant: bool = False,
-              temperature: float = 0.0,
-              top_k: int = 0, seed: int = 0, tp: int = 1, pods: int = 1,
-              admit_mode: str = "full", admit_chunk: int = 32,
-              mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
-              spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
-              draft_arch: str = "llama3.2-1b", json_out=None,
-              fault_plan=None, deadline_ms=None):
-    cfg = get_smoke(arch) if smoke else get_config(arch)
-    if cfg.family in ("encdec", "vlm"):
-        raise SystemExit("trace mode supports text-only archs")
-    mesh, ctx, tp = _mesh_and_ctx(tp, pods, ar_strategy, overlap,
-                                  seq_parallel, ar_quant)
-    ap = make_plan(cfg, tp)
-    params = init_params(jax.random.PRNGKey(seed), ap)
-    injector = _make_injector(fault_plan)
-    sched = ContinuousBatcher(
-        ap, params, slots=slots, s_max=s_max, ctx=ctx, mesh=mesh,
-        block_size=block_size, n_blocks=n_blocks, kv_quant=kv_quant,
-        ar_table=ar_table,
-        temperature=temperature, top_k=top_k, seed=seed,
-        admit_mode=admit_mode, admit_chunk=admit_chunk,
-        spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
-        draft_arch=draft_arch, injector=injector,
-        deadline_s=deadline_ms)   # 1 logical step = 1 ms (deterministic)
-    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
-                      rate=rate, vocab=cfg.vocab_size, seed=seed)
-    done = sched.run(reqs)
-    _check_outcomes(done, injector, deadline_ms)
-    m = sched.metrics(done)
-    layout = f"paged(bs={block_size})" if sched.paged else "dense"
-    if kv_quant:
+def _print_trace_metrics(spec: ServeSpec, m, slots: int):
+    r = spec.replica
+    ar = r.ar_strategy
+    if r.ar_quant != "none":
+        ar = f"{ar}/q={r.ar_quant}"
+    layout = f"paged(bs={r.block_size})" if r.block_size else "dense"
+    if r.kv_quant:
         layout += "+kv8"
-    if ar_quant != "none":
-        ar_strategy = f"{ar_strategy}/q={ar_quant}"
-    print(f"[serve] trace {arch} [{layout} ar={ar_strategy} tp={tp}"
-          f"{' overlap' if overlap else ''}]: "
+    print(f"[serve] trace {r.arch} [{layout} ar={ar} tp={r.tp}"
+          f"{' overlap' if r.overlap else ''}]: "
           f"{m.completed}/{m.requests} reqs, {m.total_new_tokens} tokens "
           f"in {m.wall_s:.1f}s ({m.throughput_tok_s:.0f} tok/s, "
           f"slots={slots}, {m.steps} steps)")
@@ -198,94 +145,60 @@ def run_trace(arch: str, *, smoke: bool = True, n_requests: int = 12,
           f"{m.kv_capacity_tokens} reserved "
           f"(util {m.cache_utilization:.2f}), "
           f"{m.preemptions} preemptions")
-    if spec_mode:
-        print(f"[serve]   spec[{spec_mode} k_mean={m.spec_k_mean:.1f}"
-              f"{' adaptive' if spec_adaptive else ''}]: "
+    if r.spec_mode:
+        print(f"[serve]   spec[{r.spec_mode} k_mean={m.spec_k_mean:.1f}"
+              f"{' adaptive' if r.spec_adaptive else ''}]: "
               f"{m.accepted_tokens}/{m.drafted_tokens} drafts accepted "
               f"(rate {m.acceptance_rate:.2f}), "
               f"{m.accepted_tokens_per_step:.2f} accepted/step over "
               f"{m.spec_steps} verify steps, drafter hit rate "
               f"{m.drafter_hit_rate:.2f}")
+
+
+def run_trace(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
+              mean_out: int = 10, rate: float = 2.0, json_out=None):
+    """Colocated trace replay: one :func:`build_replica` batcher."""
+    r = spec.replica
+    cfg = _cfg(spec)
+    sched = build_replica(r)
+    injector = sched.injector
+    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
+    done = sched.run(reqs)
+    _check_outcomes(done, injector, r.deadline_ms)
+    m = sched.metrics(done)
+    _print_trace_metrics(spec, m, r.slots)
     if injector is not None or m.shed_requests:
         print(f"[serve]   robustness: {m.quarantines} quarantines, "
               f"{m.injected_oom} injected OOM, {m.straggler_steps} "
               f"straggler steps, {m.spec_autodisables} spec autodisables")
         _print_faults(m, injector, sched._shed)
-    if json_out:
-        with open(json_out, "w") as f:
-            json.dump(m.to_dict(), f, indent=2, default=float)
-        print(f"[serve]   metrics -> {json_out}")
+    _write_json(m, json_out)
     return done, m
 
 
-def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
-               slots: int = 4, s_max: int = 128, block_size: int = 0,
-               n_blocks=None, ar_strategy: str = "flat", ar_table=None,
-               overlap: bool = False, seq_parallel: str = "off",
-               ar_quant: str = "none",
-               prefill_tp: int = 1, prefill_pods: int = 1,
-               decode_tp: int = 1, decode_pods: int = 1,
-               prefill_ar_table=None, decode_ar_table=None,
-               temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-               admit_mode: str = "full", admit_chunk: int = 32,
-               mean_in: int = 12, mean_out: int = 10, rate: float = 2.0,
-               prefill_per_step: int = 1,
-               spec_mode=None, spec_k: int = 4, spec_adaptive: bool = False,
-               draft_arch: str = "llama3.2-1b", json_out=None,
-               fault_plan=None, deadline_ms=None):
+def run_disagg(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
+               mean_out: int = 10, rate: float = 2.0, json_out=None):
     """Disaggregated trace serving: prefill pool + decode pool, each with
-    its own mesh layout and AR dispatch table (DESIGN.md §9).
-    ``ar_table`` seeds BOTH pools when a per-pool table is not given.
-    ``fault_plan`` / ``deadline_ms`` arm the robustness layer: one
-    injector drives both the coordinator's handoff hooks and the decode
-    batcher's step hooks (DESIGN.md §11; 1 logical step = 1 ms)."""
-    from ..inference.disagg import (DisaggCoordinator, PrefillPool,
-                                    pool_tuner)
-    prefill_ar_table = prefill_ar_table or ar_table
-    decode_ar_table = decode_ar_table or ar_table
-    cfg = get_smoke(arch) if smoke else get_config(arch)
-    # seq_parallel shapes the *prefill* pool's residual layout only; the
-    # decode pool stays on the fused path (its one-token and spec-verify
-    # messages live in the latency-bound regime — DESIGN.md §10)
-    mesh_p, ctx_p, tp_p = _mesh_and_ctx(prefill_tp, prefill_pods,
-                                        ar_strategy, overlap, seq_parallel,
-                                        ar_quant)
-    mesh_d, ctx_d, tp_d = _mesh_and_ctx(decode_tp, decode_pods,
-                                        ar_strategy, overlap, "off",
-                                        ar_quant)
-    # per-pool plans + params: same weights (same key), each pool's layout
-    ap_p = make_plan(cfg, tp_p)
-    ap_d = make_plan(cfg, tp_d)
-    params_p = init_params(jax.random.PRNGKey(seed), ap_p)
-    params_d = params_p if tp_d == tp_p \
-        else init_params(jax.random.PRNGKey(seed), ap_d)
-    tuner_p = pool_tuner(prefill_ar_table)
-    tuner_d = pool_tuner(decode_ar_table)
-    pool = PrefillPool(ap_p, params_p, s_max=s_max, ctx=ctx_p, mesh=mesh_p,
-                       ar_table=tuner_p, temperature=temperature,
-                       top_k=top_k, seed=seed, admit_mode=admit_mode,
-                       admit_chunk=admit_chunk, block_size=block_size)
-    injector = _make_injector(fault_plan)
-    decode = ContinuousBatcher(
-        ap_d, params_d, slots=slots, s_max=s_max, ctx=ctx_d, mesh=mesh_d,
-        block_size=block_size, n_blocks=n_blocks, ar_table=tuner_d,
-        temperature=temperature, top_k=top_k, seed=seed,
-        spec_mode=spec_mode, spec_k=spec_k, spec_adaptive=spec_adaptive,
-        draft_arch=draft_arch, injector=injector)
-    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d,
-                              prefill_per_step=prefill_per_step,
-                              injector=injector,
-                              deadline_s=deadline_ms)  # 1 step = 1 ms
+    its own mesh layout and AR dispatch table (DESIGN.md §9), built from
+    one :func:`build_replica` call.  ``spec.replica.ar_table`` seeds BOTH
+    pools when a per-pool table is not given; ``fault_plan`` /
+    ``deadline_ms`` arm the robustness layer (DESIGN.md §11)."""
+    r = spec.replica
+    cfg = _cfg(spec)
+    coord = build_replica(r)
+    decode, injector = coord.decode, coord.injector
     reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
-                      rate=rate, vocab=cfg.vocab_size, seed=seed)
+                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
     done = coord.run(reqs)
-    _check_outcomes(done, injector, deadline_ms)
+    _check_outcomes(done, injector, r.deadline_ms)
     m = coord.metrics(done)
-    layout = f"paged(bs={block_size})" if decode.paged else "dense"
-    spec = f" spec={spec_mode}(k={spec_k})" if spec_mode else ""
-    print(f"[serve] disagg {arch} [{layout} ar={ar_strategy} "
-          f"prefill tp={tp_p}x{prefill_pods} decode tp={tp_d}x"
-          f"{decode_pods}{spec}]: {m.completed}/{m.requests} reqs, "
+    layout = f"paged(bs={r.block_size})" if decode.paged else "dense"
+    sp = f" spec={r.spec_mode}(k={r.spec_k})" if r.spec_mode else ""
+    print(f"[serve] disagg {r.arch} [{layout} ar={r.ar_strategy} "
+          f"prefill tp={r.prefill_tp}x{r.prefill_pods} decode "
+          f"tp={r.decode_tp}x{r.decode_pods}{sp}]: "
+          f"{m.completed}/{m.requests} reqs, "
           f"{m.total_new_tokens} tokens in {m.wall_s:.1f}s "
           f"({m.throughput_tok_s:.0f} tok/s, {m.steps} decode steps)")
     print(f"[serve]   TTFT p50/p99: {m.ttft_steps_p50:.1f}/"
@@ -310,11 +223,50 @@ def run_disagg(arch: str, *, smoke: bool = True, n_requests: int = 12,
               f"(ready cap {m.ready_cap}), stalls prefill="
               f"{m.prefill_stall_steps} decode={m.decode_stall_steps}")
         _print_faults(m, injector, coord._shed + decode._shed)
-    if json_out:
-        with open(json_out, "w") as f:
-            json.dump(m.to_dict(), f, indent=2, default=float)
-        print(f"[serve]   metrics -> {json_out}")
+    _write_json(m, json_out)
     return done, m
+
+
+def run_router(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
+               mean_out: int = 10, rate: float = 2.0, json_out=None):
+    """Multi-replica trace serving (DESIGN.md §13): ``spec.replicas``
+    self-contained replicas on disjoint device groups, placed by
+    ``spec.router_policy``, reported as per-replica metrics plus their
+    lossless fleet merge."""
+    r = spec.replica
+    cfg = _cfg(spec)
+    router = Router.from_spec(spec)
+    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
+    done = router.run(reqs)
+    # each replica has an independently-seeded injector; outcome checking
+    # only needs to know whether ANY faults/deadlines were armed
+    injector = router.replicas[0].injector
+    _check_outcomes(done, injector, r.deadline_ms)
+    rm = router.metrics(done)
+    m = rm.fleet
+    kind = "disagg" if r.disagg else \
+        (f"tp={r.tp}" if r.tp > 1 else "local")
+    print(f"[serve] router {r.arch} [{spec.replicas}x {kind} "
+          f"policy={spec.router_policy}]: {m.completed}/{m.requests} reqs, "
+          f"{m.total_new_tokens} tokens in {m.wall_s:.1f}s "
+          f"({m.throughput_tok_s:.0f} tok/s, {m.steps} steps)")
+    print(f"[serve]   fleet TTFT p50/p99: {m.ttft_steps_p50:.1f}/"
+          f"{m.ttft_steps_p99:.1f} steps | TPOT p50/p99: "
+          f"{m.tpot_steps_p50:.2f}/{m.tpot_steps_p99:.2f} steps")
+    print(f"[serve]   placements {rm.placements} "
+          f"(imbalance {rm.load_imbalance:.2f}), preemptions "
+          f"{m.preemptions}, shed {m.shed_requests}")
+    for i, pm in enumerate(rm.per_replica):
+        print(f"[serve]   replica {i}: {pm.completed}/{pm.requests} reqs, "
+              f"TTFT p99 {pm.ttft_steps_p99:.1f}, "
+              f"{pm.total_new_tokens} tokens")
+    if injector is not None:
+        for i, rep in enumerate(router.replicas):
+            fired = {k: v for k, v in rep.injector.stats().items() if v}
+            print(f"[serve]   replica {i} faults: {fired or 'none'}")
+    _write_json(rm, json_out)
+    return done, rm
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -381,6 +333,18 @@ def build_parser() -> argparse.ArgumentParser:
                    help="registry arch for --spec-mode draft")
     p.add_argument("--json", "--metrics-json", dest="json_out",
                    default=None, help="write trace metrics JSON here")
+    # -- multi-replica router (trace mode only) --------------------------
+    p.add_argument("--replicas", type=int, default=1,
+                   help="data-parallel replica count; > 1 serves the "
+                        "trace through the router tier, each replica on "
+                        "its own disjoint device group (DESIGN.md §13)")
+    p.add_argument("--router-policy", choices=list(ROUTER_POLICIES),
+                   default="round_robin",
+                   help="placement policy for --replicas > 1: "
+                        "round_robin (arrival index mod N), least_queue "
+                        "(fewest in flight), ttft_aware (smallest "
+                        "estimated wait from queue depth + analytic "
+                        "prefill cost)")
     # -- disaggregated prefill/decode pools (trace mode only) ------------
     p.add_argument("--disagg", action="store_true",
                    help="disaggregated serving: prefill pool + decode "
@@ -414,92 +378,29 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
-    spec_mode = None if args.spec_mode == "none" else args.spec_mode
-    ar_quant = "none" if args.ar_quant == "off" else args.ar_quant
-    if args.mode == "batch" and args.spec_adaptive:
-        raise SystemExit("--spec-adaptive is trace-mode only (the engine "
-                         "runs a fixed --spec-k)")
-    if args.mode == "batch" and (args.fault_plan or
-                                 args.deadline_ms is not None):
-        raise SystemExit("--fault-plan/--deadline-ms are trace-mode only "
-                         "(the batch engine has no recovery machinery)")
-    # -- incompatible flag combos: fail at parse time, naming both flags,
-    # instead of dying deep inside jitted step construction ---------------
-    if ar_quant == "auto" and args.ar_strategy != "auto":
-        raise SystemExit("--ar-quant auto rides the per-call-site "
-                         "autotuner: it requires --ar-strategy auto "
-                         f"(got --ar-strategy {args.ar_strategy})")
-    if args.kv_quant:
-        if args.mode != "trace":
-            raise SystemExit("--kv-quant is trace-mode only (the batch "
-                             "engine's prefill builds an fp cache)")
-        if args.admit_mode == "chunked":
-            raise SystemExit("--kv-quant is incompatible with "
-                             "--admit-mode chunked: chunked prefill "
-                             "cannot re-read the int8 cache mid-prompt "
-                             "(use --admit-mode full)")
-        if args.block_size:
-            raise SystemExit("--kv-quant is incompatible with "
-                             "--block-size (paged KV blocks are not "
-                             "scale-grouped); drop one of the two")
-        if spec_mode:
-            raise SystemExit("--kv-quant is incompatible with "
-                             "--spec-mode: the verify pass rides "
-                             "chunked prefill over the int8 cache")
-        if args.disagg:
-            raise SystemExit("--kv-quant is incompatible with --disagg: "
-                             "the KV handoff ships fp states between "
-                             "pools")
-    if args.disagg:
-        if args.mode != "trace":
-            raise SystemExit("--disagg is trace-mode only")
-        run_disagg(args.arch, smoke=args.smoke, n_requests=args.requests,
-                   slots=args.slots, s_max=args.s_max,
-                   block_size=args.block_size, n_blocks=args.n_blocks,
-                   ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                   overlap=args.overlap, seq_parallel=args.seq_parallel,
-                   ar_quant=ar_quant,
-                   prefill_tp=args.prefill_tp,
-                   prefill_pods=args.prefill_pods,
-                   decode_tp=args.decode_tp, decode_pods=args.decode_pods,
-                   prefill_ar_table=args.prefill_ar_table,
-                   decode_ar_table=args.decode_ar_table,
-                   temperature=args.temperature, top_k=args.top_k,
-                   seed=args.seed, admit_mode=args.admit_mode,
-                   admit_chunk=args.admit_chunk, rate=args.rate,
-                   prefill_per_step=args.prefill_per_step,
-                   spec_mode=spec_mode, spec_k=args.spec_k,
-                   spec_adaptive=args.spec_adaptive,
-                   draft_arch=args.draft_arch, json_out=args.json_out,
-                   fault_plan=args.fault_plan,
-                   deadline_ms=args.deadline_ms)
+    try:
+        spec = ServeSpec.from_args(args)
+    except SpecError as e:
+        # one validation home (ServeSpec.validate); the CLI only converts
+        # the rejection into an exit status
+        raise SystemExit(str(e))
+    # every CLI combination must survive the JSON round trip (the bench /
+    # router serialization contract; cheap, so asserted on every run)
+    assert ServeSpec.from_json(spec.to_json()) == spec, "spec round trip"
+    if spec.mode == "batch":
+        run_batch(spec, batch=args.batch, prompt_len=args.prompt_len,
+                  max_new=args.max_new)
         return 0
-    if args.mode == "batch":
-        run_batch(args.arch, smoke=args.smoke, batch=args.batch,
-                  prompt_len=args.prompt_len, max_new=args.max_new,
-                  ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                  overlap=args.overlap, seq_parallel=args.seq_parallel,
-                  ar_quant=ar_quant, temperature=args.temperature,
-                  top_k=args.top_k, seed=args.seed, tp=args.tp,
-                  pods=args.pods, block_size=args.block_size,
-                  spec_mode=spec_mode, spec_k=args.spec_k,
-                  draft_arch=args.draft_arch)
+    if _cfg(spec).family in ("encdec", "vlm"):
+        raise SystemExit("trace mode supports text-only archs")
+    kw = dict(n_requests=args.requests, rate=args.rate,
+              json_out=args.json_out)
+    if spec.replicas > 1:
+        run_router(spec, **kw)
+    elif spec.replica.disagg:
+        run_disagg(spec, **kw)
     else:
-        run_trace(args.arch, smoke=args.smoke, n_requests=args.requests,
-                  slots=args.slots, s_max=args.s_max,
-                  block_size=args.block_size, n_blocks=args.n_blocks,
-                  ar_strategy=args.ar_strategy, ar_table=args.ar_table,
-                  overlap=args.overlap, seq_parallel=args.seq_parallel,
-                  ar_quant=ar_quant, kv_quant=args.kv_quant,
-                  temperature=args.temperature,
-                  top_k=args.top_k, seed=args.seed, tp=args.tp,
-                  pods=args.pods, admit_mode=args.admit_mode,
-                  admit_chunk=args.admit_chunk, rate=args.rate,
-                  spec_mode=spec_mode, spec_k=args.spec_k,
-                  spec_adaptive=args.spec_adaptive,
-                  draft_arch=args.draft_arch, json_out=args.json_out,
-                  fault_plan=args.fault_plan,
-                  deadline_ms=args.deadline_ms)
+        run_trace(spec, **kw)
     return 0
 
 

@@ -1,6 +1,9 @@
-"""Distribution layer: sharding rules, step builders, pipeline parallelism."""
+"""Distribution layer: sharding rules, step builders, pipeline parallelism,
+and mesh-topology construction (per-replica device carving)."""
 from .sharding import (param_specs, param_fsdp_dims, cache_spec, data_specs,
                        gather_params, TP_RULES)
+from .topology import mesh_and_ctx, replica_device_groups
 
 __all__ = ["param_specs", "param_fsdp_dims", "cache_spec", "data_specs",
-           "gather_params", "TP_RULES"]
+           "gather_params", "TP_RULES", "mesh_and_ctx",
+           "replica_device_groups"]

@@ -7,17 +7,21 @@ dispatch tables; the observed table keys must show the prefill pool
 dispatching on strictly larger message-size buckets than the decode pool
 (the disaggregation payoff the ISSUE/DESIGN §9 claim)."""
 import numpy as np, jax, jax.numpy as jnp
-from repro.core.compat import AxisType, make_mesh
-from repro.core import ParallelCtx
 from repro.models import ModelConfig, make_plan, init_params
-from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
-from repro.inference.scheduler import ContinuousBatcher, make_trace
+from repro.inference.scheduler import make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 
 cfg = ModelConfig(name="disagg-tiny", family="dense", n_layers=2,
                   d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
                   d_ff=128, vocab_size=96, dtype=jnp.float32)
 key = jax.random.PRNGKey(0)
 S_MAX, SLOTS = 64, 4
+
+# arch is nominal: per-pool plans built from the tiny cfg are passed in
+RL = ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX)
+DS = RL.replace(disagg=True, prefill_tp=8, prefill_pods=2, decode_tp=4,
+                ar_strategy="auto", overlap=True, admit_mode="chunked",
+                admit_chunk=16, block_size=8)
 
 
 def trace():
@@ -29,33 +33,16 @@ def trace():
 ap1 = make_plan(cfg, 1)
 p1 = init_params(key, ap1)
 ref = {r.rid: r.output
-       for r in ContinuousBatcher(ap1, p1, slots=SLOTS,
-                                  s_max=S_MAX).run(trace())}
+       for r in build_replica(RL, ap=ap1, params=p1).run(trace())}
 assert all(v is not None for v in ref.values())
 
-# -- prefill pool: 2 pods x 4-way TP, its own auto table ---------------------
-mesh_p = make_mesh((2, 4), ("pod", "model"),
-                   axis_types=(AxisType.Auto,) * 2)
-ctx_p = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                    ar_strategy="auto", overlap_matmul=True,
-                    overlap_chunks=4)
+# -- prefill 2 pods x 4-way TP -> decode single-pod 4-way TP, own tables -----
 ap8 = make_plan(cfg, 8)
 p8 = init_params(key, ap8)
-tuner_p = pool_tuner(None)
-pool = PrefillPool(ap8, p8, s_max=S_MAX, ctx=ctx_p, mesh=mesh_p,
-                   ar_table=tuner_p, admit_mode="chunked", admit_chunk=16,
-                   block_size=8)
-
-# -- decode pool: single-pod 4-way TP, different layout + table ---------------
-mesh_d = make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
-ctx_d = ParallelCtx(tp_fast=("model",), ar_strategy="auto")
 ap4 = make_plan(cfg, 4)
 p4 = init_params(key, ap4)
-tuner_d = pool_tuner(None)
-decode = ContinuousBatcher(ap4, p4, slots=SLOTS, s_max=S_MAX, ctx=ctx_d,
-                           mesh=mesh_d, block_size=8, ar_table=tuner_d)
-
-coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d)
+coord = build_replica(DS, prefill_ap=ap8, prefill_params=p8,
+                      decode_ap=ap4, decode_params=p4)
 done = coord.run(trace())
 m = coord.metrics(done)
 assert m.completed == len(done), m
@@ -66,7 +53,8 @@ print(f"disagg mesh parity OK (tp8x2pods prefill -> tp4 decode, "
       f"{m.handoffs} handoffs, {m.transfer_bytes} bytes)")
 
 # -- per-pool AR dispatch: observed table keys, not just analytics ------------
-bp, bd = tuner_p.lookup_buckets(), tuner_d.lookup_buckets()
+bp, bd = coord.prefill.tuner.lookup_buckets(), \
+    coord.decode_tuner.lookup_buckets()
 assert bp and bd, (bp, bd)
 assert max(bp) > max(bd), \
     f"prefill pool should dispatch on larger AR messages: {bp} vs {bd}"

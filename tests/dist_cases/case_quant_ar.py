@@ -122,19 +122,18 @@ for quant, rtol, min_agree in (("int8", 0.08, 60), ("int4", 0.6, 20)):
           f"argmax agreement {agree}/{tok_q.size}")
 
 # -- D: serve stack end-to-end with ar_quant=auto ----------------------------
-from repro.inference.scheduler import ContinuousBatcher, make_trace
+from repro.inference.scheduler import make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 
-ctx_fp = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                     ar_strategy="auto")
-ctx_q = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                    ar_strategy="auto", ar_quant="auto")
+# arch is nominal: ap/params built from the tiny cfg are passed explicitly
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=64, tp=8, pods=2,
+                 ar_strategy="auto")
 reqs = lambda: make_trace(6, mean_in=8, mean_out=5, rate=3.0,
                           vocab=cfg.vocab_size, seed=2)
 ref_done = {r.rid: r.output for r in
-            ContinuousBatcher(ap, params, slots=3, s_max=64, ctx=ctx_fp,
-                              mesh=mesh).run(reqs())}
-done = ContinuousBatcher(ap, params, slots=3, s_max=64, ctx=ctx_q,
-                         mesh=mesh).run(reqs())
+            build_replica(RS, ap=ap, params=params).run(reqs())}
+done = build_replica(RS.replace(ar_quant="auto"), ap=ap,
+                     params=params).run(reqs())
 assert all(r.output is not None for r in done)
 # one-token decode messages sit far below the quant crossover, so the
 # autotuner resolves these call sites to the fp strategy -> exact parity

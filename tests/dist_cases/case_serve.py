@@ -3,18 +3,18 @@ mesh with ar_strategy="auto" + overlap_matmul + a paged KV cache must
 reproduce the local dense batcher's greedy tokens request-for-request, and
 keep doing so under a block pool tight enough to force preemption."""
 import numpy as np, jax, jax.numpy as jnp
-from repro.core.compat import AxisType, make_mesh
-from repro.core import ParallelCtx
 from repro.models import ModelConfig, make_plan, init_params
-from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
-
-mesh = make_mesh((2, 4), ("pod", "model"), axis_types=(AxisType.Auto,) * 2)
+from repro.inference.scheduler import Request, make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 
 cfg = ModelConfig(name="serve-tiny", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
                   vocab_size=96, dtype=jnp.float32)
 key = jax.random.PRNGKey(0)
 S_MAX, SLOTS = 64, 4
+# arch is nominal: ap/params built from the tiny cfg are passed explicitly
+RL = ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX)
+RM = RL.replace(tp=8, pods=2, ar_strategy="auto", overlap=True)
 
 
 def trace():
@@ -25,18 +25,15 @@ def trace():
 # -- local dense reference ---------------------------------------------------
 ap1 = make_plan(cfg, 1)
 p1 = init_params(key, ap1)
-ref_sched = ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX)
+ref_sched = build_replica(RL, ap=ap1, params=p1)
 ref = {r.rid: r.output for r in ref_sched.run(trace())}
 assert all(v is not None for v in ref.values())
 
 # -- mesh paged batcher: auto AR + overlapped collective-matmul --------------
-ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",), ar_strategy="auto",
-                  overlap_matmul=True, overlap_chunks=4)
 apN = make_plan(cfg, 8)
 pN = init_params(key, apN)
-mesh_sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX,
-                               ctx=ctx, mesh=mesh, block_size=8,
-                               admit_mode="chunked", admit_chunk=16)
+mesh_sched = build_replica(RM.replace(block_size=8, admit_mode="chunked",
+                                      admit_chunk=16), ap=apN, params=pN)
 done = mesh_sched.run(trace())
 m = mesh_sched.metrics(done)
 assert m.completed == len(done), m
@@ -49,16 +46,16 @@ print(f"mesh paged trace parity OK (peak {m.peak_kv_tokens} of "
       f"{SLOTS * S_MAX} dense tokens, util {m.cache_utilization:.2f})")
 
 # -- tight pool on the mesh: preemption + still-correct tokens ---------------
-tight = ContinuousBatcher(apN, pN, slots=3, s_max=S_MAX, ctx=ctx,
-                          mesh=mesh, block_size=8, n_blocks=9,
-                          admit_mode="chunked", admit_chunk=16)
+tight = build_replica(RM.replace(slots=3, block_size=8, n_blocks=9,
+                                 admit_mode="chunked", admit_chunk=16),
+                      ap=apN, params=pN)
 rng = np.random.default_rng(5)
 long_reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                 16).astype(np.int32),
                      max_new=30, arrival_s=0.0) for i in range(3)]
 iso = {}
 for r in long_reqs:
-    s1 = ContinuousBatcher(ap1, p1, slots=1, s_max=S_MAX)
+    s1 = build_replica(RL.replace(slots=1), ap=ap1, params=p1)
     rr = Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
     s1.run([rr])
     iso[r.rid] = rr.output

@@ -11,18 +11,19 @@ reduce-scatter collectives where the fused flat path lowers a single
 all-reduce per residual.
 """
 import numpy as np, jax, jax.numpy as jnp
-from repro.core.compat import AxisType, make_mesh
-from repro.core import ParallelCtx
 from repro.models import ModelConfig, make_plan, init_params
-from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
-from repro.inference.scheduler import ContinuousBatcher, make_trace
+from repro.inference.scheduler import make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 
-mesh = make_mesh((2, 4), ("pod", "model"), axis_types=(AxisType.Auto,) * 2)
 cfg = ModelConfig(name="sp-tiny", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
                   vocab_size=96, dtype=jnp.float32)
 key = jax.random.PRNGKey(0)
 S_MAX, SLOTS = 64, 3
+
+# arch is nominal: ap/params built from the tiny cfg are passed explicitly
+RL = ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX)
+RM = RL.replace(tp=8, pods=2, block_size=8)
 
 
 def trace():
@@ -34,7 +35,7 @@ def trace():
 ap1 = make_plan(cfg, 1)
 p1 = init_params(key, ap1)
 ref = {r.rid: r.output for r in
-       ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX).run(trace())}
+       build_replica(RL, ap=ap1, params=p1).run(trace())}
 assert all(v is not None for v in ref.values())
 
 apN = make_plan(cfg, 8)
@@ -45,11 +46,9 @@ tok = jnp.zeros((1, 16), jnp.int32)
 pos = jnp.arange(16, dtype=jnp.int32)[None]
 hlo = {}
 for sp_mode in ("off", "on"):
-    ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                      ar_strategy="flat", seq_parallel=sp_mode)
-    sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
-                              mesh=mesh, block_size=8,
-                              admit_mode="chunked", admit_chunk=16)
+    sched = build_replica(RM.replace(seq_parallel=sp_mode,
+                                     admit_mode="chunked", admit_chunk=16),
+                          ap=apN, params=pN)
     hlo[sp_mode] = sched._admit_chunked.lower(
         pN, sched.cache, tok, pos, jnp.int32(0), jnp.int32(15),
         jax.random.PRNGKey(0)).as_text(dialect="hlo")
@@ -62,35 +61,27 @@ print("SP lowering structure OK (reduce-scatter only under seq_parallel)")
 # -- parity: forced SP, flat strategy, full + chunked admission, paged -------
 for admit_kw in (dict(admit_mode="full"),
                  dict(admit_mode="chunked", admit_chunk=16)):
-    ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                      ar_strategy="flat", seq_parallel="on")
-    sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
-                              mesh=mesh, block_size=8, **admit_kw)
+    sched = build_replica(RM.replace(seq_parallel="on", **admit_kw),
+                          ap=apN, params=pN)
     for r in sched.run(trace()):
         assert np.array_equal(ref[r.rid], r.output), \
             f"rid {r.rid}: SP {admit_kw['admit_mode']} tokens diverge"
     print(f"SP parity OK ({admit_kw['admit_mode']} admission)")
 
 # -- parity: SP + autotuned AR + overlapped collective-matmul ----------------
-ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",), ar_strategy="auto",
-                  overlap_matmul=True, overlap_chunks=4, seq_parallel="on")
-sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
-                          mesh=mesh, block_size=8, admit_mode="chunked",
-                          admit_chunk=16)
+sched = build_replica(RM.replace(seq_parallel="on", ar_strategy="auto",
+                                 overlap=True, admit_mode="chunked",
+                                 admit_chunk=16), ap=apN, params=pN)
 for r in sched.run(trace()):
     assert np.array_equal(ref[r.rid], r.output), f"rid {r.rid} (auto+ov)"
 print("SP + auto + overlap parity OK")
 
 # -- parity: disaggregated prefill pool under SP (mesh pool -> local decode) -
-ctx_p = ParallelCtx(tp_fast=("model",), tp_slow=("pod",),
-                    ar_strategy="auto", seq_parallel="on")
-tuner_p = pool_tuner(None)
-pool = PrefillPool(apN, pN, s_max=S_MAX, ctx=ctx_p, mesh=mesh,
-                   ar_table=tuner_p)
-tuner_d = pool_tuner(None)
-decode = ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX,
-                           block_size=8, ar_table=tuner_d)
-coord = DisaggCoordinator(pool, decode, decode_tuner=tuner_d)
+coord = build_replica(
+    RL.replace(disagg=True, prefill_tp=8, prefill_pods=2, decode_tp=1,
+               ar_strategy="auto", seq_parallel="on", block_size=8,
+               prefill_block_size=0),
+    prefill_ap=apN, prefill_params=pN, decode_ap=ap1, decode_params=p1)
 done = coord.run(trace())
 for r in done:
     assert np.array_equal(ref[r.rid], r.output), f"rid {r.rid} (disagg SP)"

@@ -10,13 +10,9 @@ the k-times-wider AR messages: the same table serves both the 1-token
 decode and the (k+1)-token verify shapes in one process.
 """
 import numpy as np, jax, jax.numpy as jnp
-from repro.core.compat import AxisType, make_mesh
-from repro.core import ParallelCtx
 from repro.models import ModelConfig, make_plan, init_params
-from repro.inference.engine import InferenceEngine
-from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
-
-mesh = make_mesh((2, 4), ("pod", "model"), axis_types=(AxisType.Auto,) * 2)
+from repro.inference.scheduler import Request, make_trace
+from repro.inference.spec import ReplicaSpec, build_engine, build_replica
 
 cfg = ModelConfig(name="spec-tiny", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
@@ -24,8 +20,9 @@ cfg = ModelConfig(name="spec-tiny", family="dense", n_layers=2, d_model=64,
 key = jax.random.PRNGKey(0)
 S_MAX, SLOTS, K = 64, 4, 4
 
-ctx = ParallelCtx(tp_fast=("model",), tp_slow=("pod",), ar_strategy="auto",
-                  overlap_matmul=True, overlap_chunks=4)
+# arch is nominal: ap/params built from the tiny cfg are passed explicitly
+RL = ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX)
+RM = RL.replace(tp=8, pods=2, ar_strategy="auto", overlap=True)
 ap1 = make_plan(cfg, 1)
 p1 = init_params(key, ap1)
 apN = make_plan(cfg, 8)
@@ -38,15 +35,14 @@ def trace():
 
 
 # -- local dense plain reference --------------------------------------------
-ref_sched = ContinuousBatcher(ap1, p1, slots=SLOTS, s_max=S_MAX)
+ref_sched = build_replica(RL, ap=ap1, params=p1)
 ref = {r.rid: r.output for r in ref_sched.run(trace())}
 assert all(v is not None for v in ref.values())
 
 # -- mesh paged spec batcher: auto AR + overlap + chunked admission ----------
-spec_sched = ContinuousBatcher(apN, pN, slots=SLOTS, s_max=S_MAX, ctx=ctx,
-                               mesh=mesh, block_size=8,
-                               admit_mode="chunked", admit_chunk=16,
-                               spec_mode="ngram", spec_k=K)
+spec_sched = build_replica(RM.replace(block_size=8, admit_mode="chunked",
+                                      admit_chunk=16, spec_mode="ngram",
+                                      spec_k=K), ap=apN, params=pN)
 done = spec_sched.run(trace())
 m = spec_sched.metrics(done)
 assert m.completed == len(done), m
@@ -60,16 +56,16 @@ print(f"mesh spec trace parity OK ({m.steps} verify steps, "
       f"drafter hit rate {m.drafter_hit_rate:.2f})")
 
 # -- tight pool on the mesh: preemption mid-speculation + rollback -----------
-tight = ContinuousBatcher(apN, pN, slots=3, s_max=S_MAX, ctx=ctx, mesh=mesh,
-                          block_size=8, n_blocks=9, spec_mode="ngram",
-                          spec_k=K)
+tight = build_replica(RM.replace(slots=3, block_size=8, n_blocks=9,
+                                 spec_mode="ngram", spec_k=K),
+                      ap=apN, params=pN)
 rng = np.random.default_rng(5)
 long_reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                 16).astype(np.int32),
                      max_new=30, arrival_s=0.0) for i in range(3)]
 iso = {}
 for r in long_reqs:
-    s1 = ContinuousBatcher(ap1, p1, slots=1, s_max=S_MAX)
+    s1 = build_replica(RL.replace(slots=1), ap=ap1, params=p1)
     rr = Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
     s1.run([rr])
     iso[r.rid] = rr.output
@@ -84,9 +80,9 @@ print(f"mesh spec preemption+rollback OK ({mt.preemptions} preemptions)")
 
 # -- engine: mesh spec generate == mesh plain generate -----------------------
 prompts = np.random.default_rng(7).integers(0, cfg.vocab_size, (4, 8))
-plain_eng = InferenceEngine(apN, pN, ctx=ctx, mesh=mesh, s_max=32)
-spec_eng = InferenceEngine(apN, pN, ctx=ctx, mesh=mesh, s_max=32,
-                           spec_mode="ngram", spec_k=K)
+plain_eng = build_engine(RM.replace(s_max=32), ap=apN, params=pN)
+spec_eng = build_engine(RM.replace(s_max=32, spec_mode="ngram", spec_k=K),
+                        ap=apN, params=pN)
 r_plain = plain_eng.generate(prompts, 12)
 r_spec = spec_eng.generate(prompts, 12)
 assert np.array_equal(r_plain.new_tokens, r_spec.new_tokens), \

@@ -9,11 +9,17 @@ import pytest
 from repro.configs import get_smoke
 from repro.models.common import plan_gqa
 from repro.models.transformer import make_plan, init_params
-from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
-from repro.inference.engine import InferenceEngine
+from repro.inference.disagg import PrefillPool
 from repro.inference.kv_cache import (KVBundle, export_slot, heads_to_slots,
                                       slots_to_heads)
-from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
+from repro.inference.scheduler import Request, make_trace
+from repro.inference.spec import (ReplicaSpec, build_engine,
+                                  build_prefill_pool, build_replica)
+
+# the one construction path (DESIGN.md §13): every batcher/pool/
+# coordinator below is built from a spec, never from raw kwargs
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=96)
+DS = RS.replace(disagg=True)
 
 
 @pytest.fixture(scope="module")
@@ -70,7 +76,7 @@ def test_export_slot_dense_vs_paged_and_trash_isolation(tiny_lm):
     kv_map = ap.gqa.kv_map
 
     def admit_two(**kw):
-        sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+        sched = build_replica(RS.replace(**kw), ap=ap, params=params)
         # admit directly (no decode steps): slot 0 = prompt, slot 1 = other
         sched._wall0 = 0.0
         assert sched._admit(0, Request(rid=0, prompt=prompt, max_new=4), 0.0)
@@ -105,11 +111,12 @@ def test_prefill_pool_full_vs_chunked_bundles(tiny_lm):
     prompt = np.random.default_rng(3).integers(
         0, cfg.vocab_size, 23).astype(np.int32)
     req = Request(rid=0, prompt=prompt, max_new=8)
-    full = PrefillPool(ap, params, s_max=96)
+    full = build_prefill_pool(RS, ap=ap, params=params)
     tok_f, b_f = full.prefill(req)
     for kw in (dict(), dict(block_size=8)):
-        chunked = PrefillPool(ap, params, s_max=96, admit_mode="chunked",
-                              admit_chunk=16, **kw)
+        chunked = build_prefill_pool(
+            RS.replace(admit_mode="chunked", admit_chunk=16, **kw),
+            ap=ap, params=params)
         tok_c, b_c = chunked.prefill(req)
         assert tok_f == tok_c
         np.testing.assert_array_equal(b_f.k, b_c.k)
@@ -123,17 +130,12 @@ def test_prefill_pool_full_vs_chunked_bundles(tiny_lm):
 
 
 def _colocated(cfg, ap, params, reqs, **kw):
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+    sched = build_replica(RS.replace(**kw), ap=ap, params=params)
     return {r.rid: r.output for r in sched.run(reqs)}
 
 
-def _disagg(cfg, ap, params, reqs, *, pool_kw=None, decode_kw=None,
-            **coord_kw):
-    pool = PrefillPool(ap, params, s_max=96, **(pool_kw or {}))
-    tuner = pool_tuner(None)
-    decode = ContinuousBatcher(ap, params, slots=3, s_max=96,
-                               ar_table=tuner, **(decode_kw or {}))
-    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner, **coord_kw)
+def _disagg(cfg, ap, params, reqs, spec=DS):
+    coord = build_replica(spec, ap=ap, params=params)
     done = coord.run(reqs)
     assert all(r.output is not None for r in done)
     return {r.rid: r.output for r in done}, coord
@@ -144,11 +146,10 @@ def test_disagg_trace_bitwise_equals_colocated(tiny_lm):
     serve, request for request, for full and chunked prefill pools."""
     cfg, ap, params = tiny_lm
     ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8)
-    for pool_kw in (dict(),
-                    dict(admit_mode="chunked", admit_chunk=16,
-                         block_size=8)):
-        got, _ = _disagg(cfg, ap, params, _trace(cfg), pool_kw=pool_kw,
-                         decode_kw=dict(block_size=8))
+    for spec in (DS.replace(block_size=8, prefill_block_size=0),
+                 DS.replace(block_size=8, admit_mode="chunked",
+                            admit_chunk=16)):
+        got, _ = _disagg(cfg, ap, params, _trace(cfg), spec)
         for rid in ref:
             np.testing.assert_array_equal(ref[rid], got[rid])
 
@@ -160,8 +161,8 @@ def test_disagg_spec_decode_parity(tiny_lm):
     ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8)
     reqs = _trace(cfg)
     got, coord = _disagg(cfg, ap, params, reqs,
-                         decode_kw=dict(block_size=8, spec_mode="ngram",
-                                        spec_k=4))
+                         DS.replace(block_size=8, prefill_block_size=0,
+                                    spec_mode="ngram", spec_k=4))
     for rid in ref:
         np.testing.assert_array_equal(ref[rid], got[rid])
     m = coord.metrics(reqs)
@@ -188,12 +189,10 @@ def test_disagg_sampled_trace_token_identical_to_colocated(tiny_lm):
     cfg, ap, params = tiny_lm
     kw = dict(temperature=1.5, top_k=20, seed=0)
     ref = _colocated(cfg, ap, params, _trace(cfg), block_size=8, **kw)
-    for pool_kw in (dict(**kw),
-                    dict(admit_mode="chunked", admit_chunk=16,
-                         block_size=8, **kw)):
-        got, coord = _disagg(cfg, ap, params, _trace(cfg),
-                             pool_kw=pool_kw,
-                             decode_kw=dict(block_size=8, **kw))
+    for spec in (DS.replace(block_size=8, prefill_block_size=0, **kw),
+                 DS.replace(block_size=8, admit_mode="chunked",
+                            admit_chunk=16, **kw)):
+        got, coord = _disagg(cfg, ap, params, _trace(cfg), spec)
         for rid in ref:
             np.testing.assert_array_equal(ref[rid], got[rid])
     # and the stream actually sampled (differs from the greedy trace)
@@ -220,13 +219,13 @@ def test_disagg_sampled_survives_preemption(tiny_lm):
     # isolated single-slot references (never preempted)
     iso = {}
     for r in clone():
-        sched = ContinuousBatcher(ap, params, slots=1, s_max=96, **kw)
+        sched = build_replica(RS.replace(slots=1, **kw),
+                              ap=ap, params=params)
         sched.run([r])
         iso[r.rid] = r.output
-    pool = PrefillPool(ap, params, s_max=96, **kw)
-    decode = ContinuousBatcher(ap, params, slots=3, s_max=96,
-                               block_size=8, n_blocks=13, **kw)
-    coord = DisaggCoordinator(pool, decode)
+    coord = build_replica(
+        DS.replace(block_size=8, prefill_block_size=0, n_blocks=13, **kw),
+        ap=ap, params=params)
     done = coord.run(clone())
     m = coord.metrics(done)
     assert m.preemptions > 0, "pool sized to force preemption"
@@ -247,15 +246,15 @@ def test_disagg_decode_oom_reprefills_and_stays_exact(tiny_lm):
     rng = np.random.default_rng(5)
     protos = [(rng.integers(0, cfg.vocab_size, 16).astype(np.int32), 40)
               for _ in range(3)]
-    eng = InferenceEngine(ap, params, s_max=96)
+    eng = build_engine(RS, ap=ap, params=params)
     ref = {i: eng.generate(p[None], n).new_tokens[0]
            for i, (p, n) in enumerate(protos)}
     reqs = [Request(rid=i, prompt=p, max_new=n, arrival_s=0.0)
             for i, (p, n) in enumerate(protos)]
-    pool = PrefillPool(ap, params, s_max=96)
-    decode = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
-                               n_blocks=13)
-    coord = DisaggCoordinator(pool, decode)
+    coord = build_replica(
+        DS.replace(block_size=8, prefill_block_size=0, n_blocks=13),
+        ap=ap, params=params)
+    decode = coord.decode
     done = coord.run(reqs)
     m = coord.metrics(done)
     assert m.preemptions > 0
@@ -274,11 +273,11 @@ def test_admit_prefilled_rejects_when_pool_full(tiny_lm):
     cfg, ap, params = tiny_lm
     prompt = np.random.default_rng(2).integers(
         0, cfg.vocab_size, 24).astype(np.int32)
-    pool = PrefillPool(ap, params, s_max=96)
+    pool = build_prefill_pool(RS, ap=ap, params=params)
     tok, bundle = pool.prefill(Request(rid=0, prompt=prompt, max_new=4))
     # 13 blocks of 8 = 12 usable; slot 1 hogs 9, leaving 3 < the 4 needed
-    decode = ContinuousBatcher(ap, params, slots=2, s_max=96, block_size=8,
-                               n_blocks=13)
+    decode = build_replica(RS.replace(slots=2, block_size=8, n_blocks=13),
+                           ap=ap, params=params)
     decode._wall0 = 0.0
     assert decode.alloc.ensure(1, 72)
     req = Request(rid=0, prompt=prompt, max_new=4)
@@ -299,7 +298,7 @@ def test_disagg_metrics_attribution_and_ar_buckets(tiny_lm):
     cfg, ap, params = tiny_lm
     reqs = _trace(cfg)
     _, coord = _disagg(cfg, ap, params, reqs,
-                       decode_kw=dict(block_size=8))
+                       DS.replace(block_size=8, prefill_block_size=0))
     m = coord.metrics(reqs)
     assert m.completed == m.requests == len(reqs)
     assert m.handoffs == len(reqs) and m.transfer_bytes > 0

@@ -67,3 +67,9 @@ def test_faults_injected(dist_runner):
 def test_quant_allreduce(dist_runner):
     out = dist_runner("case_quant_ar.py")
     assert "quant_ar OK" in out
+
+
+@pytest.mark.dist
+def test_router_fleet(dist_runner):
+    out = dist_runner("case_router.py")
+    assert "router OK" in out

@@ -8,9 +8,11 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models.transformer import make_plan, init_params
-from repro.inference.engine import InferenceEngine
 from repro.inference.kv_cache import BlockAllocator, TRASH_BLOCK
-from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
+from repro.inference.scheduler import Request, make_trace
+from repro.inference.spec import ReplicaSpec, build_engine, build_replica
+
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=96)
 
 
 @pytest.fixture(scope="module")
@@ -23,7 +25,7 @@ def tiny_lm():
 
 def test_engine_generate_matches_stepwise(tiny_lm):
     cfg, ap, params = tiny_lm
-    eng = InferenceEngine(ap, params, s_max=64)
+    eng = build_engine(RS.replace(s_max=64), ap=ap, params=params)
     prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 12))
     res = eng.generate(prompts, 8)
     assert res.new_tokens.shape == (3, 8)
@@ -37,17 +39,18 @@ def test_scheduler_completes_and_matches_engine(tiny_lm):
     cfg, ap, params = tiny_lm
     # one request through the scheduler == plain engine generation
     prompt = np.random.default_rng(1).integers(0, cfg.vocab_size, 12)
-    sched = ContinuousBatcher(ap, params, slots=2, s_max=64)
+    sched = build_replica(RS.replace(slots=2, s_max=64), ap=ap,
+                          params=params)
     reqs = [Request(rid=0, prompt=prompt.astype(np.int32), max_new=6)]
     done = sched.run(reqs)
-    eng = InferenceEngine(ap, params, s_max=64)
+    eng = build_engine(RS.replace(s_max=64), ap=ap, params=params)
     res = eng.generate(prompt[None], 6)
     np.testing.assert_array_equal(done[0].output, res.new_tokens[0])
 
 
 def test_scheduler_trace_no_drops(tiny_lm):
     cfg, ap, params = tiny_lm
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96)
+    sched = build_replica(RS, ap=ap, params=params)
     reqs = make_trace(9, mean_in=10, mean_out=6, rate=4.0,
                       vocab=cfg.vocab_size, seed=2)
     done = sched.run(reqs)
@@ -60,7 +63,7 @@ def test_scheduler_trace_no_drops(tiny_lm):
 
 def test_scheduler_interleaves_different_lengths(tiny_lm):
     cfg, ap, params = tiny_lm
-    sched = ContinuousBatcher(ap, params, slots=2, s_max=96)
+    sched = build_replica(RS.replace(slots=2), ap=ap, params=params)
     rng = np.random.default_rng(3)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                8 + 8 * (i % 2)).astype(np.int32),
@@ -78,7 +81,7 @@ def test_scheduler_interleaves_different_lengths(tiny_lm):
 
 def _trace_outputs(ap, params, vocab, *, n=8, mean_out=6, rate=4.0,
                    seed=2, **kw):
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+    sched = build_replica(RS.replace(**kw), ap=ap, params=params)
     reqs = make_trace(n, mean_in=10, mean_out=mean_out, rate=rate,
                       vocab=vocab, seed=seed)
     done = sched.run(reqs)
@@ -122,7 +125,8 @@ def test_chunked_admission_pad_to_capacity(tiny_lm):
         0, cfg.vocab_size, 79).astype(np.int32)  # pads to 96 == s_max
 
     def run(**kw):
-        sched = ContinuousBatcher(ap, params, slots=2, s_max=96, **kw)
+        sched = build_replica(RS.replace(slots=2, **kw), ap=ap,
+                              params=params)
         r = Request(rid=0, prompt=prompt, max_new=6)
         sched.run([r])
         return r.output
@@ -133,16 +137,17 @@ def test_chunked_admission_pad_to_capacity(tiny_lm):
                dict(admit_mode="chunked", admit_chunk=16, block_size=8)):
         np.testing.assert_array_equal(ref, run(**kw))
     with pytest.raises(ValueError):
-        ContinuousBatcher(ap, params, slots=2, s_max=80,
-                          admit_mode="chunked", admit_chunk=32)
+        build_replica(RS.replace(slots=2, s_max=80, admit_mode="chunked",
+                                 admit_chunk=32), ap=ap, params=params)
 
 
 def test_engine_paged_generate_matches_dense(tiny_lm):
     cfg, ap, params = tiny_lm
     prompts = np.random.default_rng(4).integers(0, cfg.vocab_size, (3, 12))
-    res_d = InferenceEngine(ap, params, s_max=64).generate(prompts, 8)
-    res_p = InferenceEngine(ap, params, s_max=64,
-                            block_size=16).generate(prompts, 8)
+    res_d = build_engine(RS.replace(s_max=64), ap=ap,
+                         params=params).generate(prompts, 8)
+    res_p = build_engine(RS.replace(s_max=64, block_size=16), ap=ap,
+                         params=params).generate(prompts, 8)
     np.testing.assert_array_equal(res_d.new_tokens, res_p.new_tokens)
 
 
@@ -214,11 +219,11 @@ def test_preemption_resume_correctness(tiny_lm):
     protos = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                  16).astype(np.int32),
                       max_new=40, arrival_s=0.0) for i in range(3)]
-    eng = InferenceEngine(ap, params, s_max=96)
+    eng = build_engine(RS, ap=ap, params=params)
     ref = {r.rid: eng.generate(r.prompt[None], r.max_new).new_tokens[0]
            for r in protos}
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
-                              n_blocks=13)
+    sched = build_replica(RS.replace(block_size=8, n_blocks=13), ap=ap,
+                          params=params)
     done = sched.run([Request(rid=r.rid, prompt=r.prompt,
                               max_new=r.max_new) for r in protos])
     m = sched.metrics(done)
@@ -234,15 +239,19 @@ def test_scheduler_defragment_mid_run(tiny_lm):
     """Defragmenting the live pool between steps must not change tokens."""
     cfg, ap, params = tiny_lm
 
-    class DefragBatcher(ContinuousBatcher):
-        def step(self, now):
-            self.defragment()
-            super().step(now)
+    def defrag_every_step(sched):
+        inner = sched.step
+        def step(now):
+            sched.defragment()
+            inner(now)
+        sched.step = step
+        return sched
 
     # two trace shapes -> two fragmentation patterns under defrag
     for trace_kw in (dict(), dict(n=6, mean_out=8, rate=3.0, seed=6)):
         ref, _ = _trace_outputs(ap, params, cfg.vocab_size, **trace_kw)
-        sched = DefragBatcher(ap, params, slots=3, s_max=96, block_size=8)
+        sched = defrag_every_step(build_replica(
+            RS.replace(block_size=8), ap=ap, params=params))
         reqs = make_trace(trace_kw.get("n", 8), mean_in=10,
                           mean_out=trace_kw.get("mean_out", 6),
                           rate=trace_kw.get("rate", 4.0),
@@ -260,8 +269,9 @@ def test_sampled_serving(tiny_lm):
     cfg, ap, params = tiny_lm
 
     def run(seed):
-        sched = ContinuousBatcher(ap, params, slots=2, s_max=96,
-                                  temperature=1.5, top_k=20, seed=seed)
+        sched = build_replica(RS.replace(slots=2, temperature=1.5,
+                                         top_k=20, seed=seed),
+                              ap=ap, params=params)
         reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32) + i,
                         max_new=(1 if i == 0 else 12), arrival_s=0.0)
                 for i in range(3)]
@@ -277,7 +287,7 @@ def test_sampled_serving(tiny_lm):
 
 def test_trace_metrics_sane(tiny_lm):
     cfg, ap, params = tiny_lm
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8)
+    sched = build_replica(RS.replace(block_size=8), ap=ap, params=params)
     reqs = make_trace(8, mean_in=10, mean_out=6, rate=4.0,
                       vocab=cfg.vocab_size, seed=2)
     done = sched.run(reqs)

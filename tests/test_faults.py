@@ -14,12 +14,17 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.core.autotune import AutoTuner, TABLE_VERSION
-from repro.inference.disagg import DisaggCoordinator, PrefillPool, pool_tuner
 from repro.inference.faults import (FAULT_KINDS, FaultInjector, FaultPlan,
                                     hash_unit)
 from repro.inference.kv_cache import BundleIntegrityError, KVBundle
-from repro.inference.scheduler import ContinuousBatcher, make_trace
+from repro.inference.scheduler import make_trace
+from repro.inference.spec import ReplicaSpec, build_replica
 from repro.inference.speculative import Drafter
+
+# spec templates: paged colocated batcher / disagg with a dense prefill
+# pool in front of the paged decode pool (the historical test shape)
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=96, block_size=8)
+DS = RS.replace(disagg=True, prefill_block_size=0)
 
 
 @pytest.fixture(scope="module")
@@ -36,19 +41,18 @@ def _trace(cfg, n=10, seed=4, mean_in=10, mean_out=6, rate=3.0):
                       vocab=cfg.vocab_size, seed=seed)
 
 
-def _colocated(ap, params, reqs, **kw):
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
-                              **kw)
+def _colocated(ap, params, reqs, injector=None, drafter=None, **kw):
+    sched = build_replica(RS.replace(**kw), ap=ap, params=params,
+                          injector=injector, drafter=drafter)
     done = sched.run(reqs)
     return {r.rid: r.output for r in done}, sched
 
 
-def _disagg(ap, params, reqs, *, decode_kw=None, **coord_kw):
-    pool = PrefillPool(ap, params, s_max=96)
-    tuner = pool_tuner(None)
-    decode = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
-                               ar_table=tuner, **(decode_kw or {}))
-    coord = DisaggCoordinator(pool, decode, decode_tuner=tuner, **coord_kw)
+def _disagg(ap, params, reqs, injector=None, **kw):
+    # one injector drives the coordinator's handoff hooks AND the decode
+    # batcher's step hooks (the build_replica contract)
+    coord = build_replica(DS.replace(**kw), ap=ap, params=params,
+                          injector=injector)
     done = coord.run(reqs)
     return {r.rid: r.output for r in done}, coord
 
@@ -190,8 +194,7 @@ def test_handoff_drops_retry_and_stay_bitwise_exact(tiny_lm):
     cfg, ap, params = tiny_lm
     ref, _ = _colocated(ap, params, _trace(cfg))
     inj = FaultInjector(FaultPlan(seed=11, handoff_drop=0.3))
-    got, coord = _disagg(ap, params, _trace(cfg), injector=inj,
-                         decode_kw=dict(injector=inj))
+    got, coord = _disagg(ap, params, _trace(cfg), injector=inj)
     assert coord.handoff_drops > 0 and coord.handoff_retries > 0
     for rid in ref:
         np.testing.assert_array_equal(ref[rid], got[rid])
@@ -206,8 +209,7 @@ def test_corrupt_handoffs_reprefill_and_stay_bitwise_exact(tiny_lm):
     ref, _ = _colocated(ap, params, _trace(cfg))
     inj = FaultInjector(FaultPlan(seed=5, handoff_corrupt=0.5))
     reqs = _trace(cfg)
-    got, coord = _disagg(ap, params, reqs, injector=inj,
-                         decode_kw=dict(injector=inj))
+    got, coord = _disagg(ap, params, reqs, injector=inj)
     m = coord.metrics(reqs)
     assert coord.handoff_corrupt > 0 and coord.handoff_reprefills > 0
     assert m.handoff_corrupt == coord.handoff_corrupt
@@ -252,8 +254,7 @@ def test_decode_stall_backpressures_bounded_ready_queue(tiny_lm):
     ref, _ = _colocated(ap, params, _trace(cfg))
     inj = FaultInjector(FaultPlan(seed=2, decode_stall=0.4, stall_steps=2))
     got, coord = _disagg(ap, params, _trace(cfg), injector=inj,
-                         decode_kw=dict(injector=inj), max_ready=3,
-                         prefill_per_step=4)
+                         max_ready=3, prefill_per_step=4)
     m = coord.metrics(list(_trace(cfg)))
     assert m.decode_stall_steps > 0
     assert m.backpressure_steps > 0
@@ -266,8 +267,7 @@ def test_prefill_stall_only_delays_never_corrupts(tiny_lm):
     cfg, ap, params = tiny_lm
     ref, _ = _colocated(ap, params, _trace(cfg))
     inj = FaultInjector(FaultPlan(seed=6, prefill_stall=0.5, stall_steps=3))
-    got, coord = _disagg(ap, params, _trace(cfg), injector=inj,
-                         decode_kw=dict(injector=inj))
+    got, coord = _disagg(ap, params, _trace(cfg), injector=inj)
     assert coord.prefill_stall_steps > 0
     for rid in ref:
         np.testing.assert_array_equal(ref[rid], got[rid])
@@ -286,8 +286,7 @@ def test_deadline_shed_reports_and_preserves_survivors(tiny_lm):
     ref, _ = _colocated(ap, params, _trace(cfg))
     inj = FaultInjector(FaultPlan(seed=3, prefill_stall=0.6, stall_steps=4))
     reqs = _trace(cfg)
-    got, coord = _disagg(ap, params, reqs, injector=inj, deadline_s=4.0,
-                         decode_kw=dict(injector=inj))
+    got, coord = _disagg(ap, params, reqs, injector=inj, deadline_ms=4.0)
     m = coord.metrics(reqs)
     assert m.shed_requests > 0, "deadline never tripped — not a test"
     assert m.shed_requests + m.completed == len(reqs)
@@ -304,11 +303,11 @@ def test_colocated_deadline_shed(tiny_lm):
     bitwise-identical to the no-deadline run."""
     cfg, ap, params = tiny_lm
     reqs_ref = _trace(cfg, n=8, rate=10.0)
-    sched = ContinuousBatcher(ap, params, slots=1, s_max=96, block_size=8)
+    sched = build_replica(RS.replace(slots=1), ap=ap, params=params)
     ref = {r.rid: r.output for r in sched.run(reqs_ref)}
     reqs = _trace(cfg, n=8, rate=10.0)
-    tight = ContinuousBatcher(ap, params, slots=1, s_max=96, block_size=8,
-                              deadline_s=10.0)
+    tight = build_replica(RS.replace(slots=1, deadline_ms=10.0),
+                          ap=ap, params=params)
     done = tight.run(reqs)
     m = tight.metrics(done)
     assert m.shed_requests > 0
@@ -434,8 +433,8 @@ def test_overcommitted_pool_completes_and_replays_identically(tiny_lm,
 
     def go():
         reqs = _trace(cfg, n=8, seed=100 + seed, mean_out=8, rate=6.0)
-        sched = ContinuousBatcher(ap, params, slots=4, s_max=96,
-                                  block_size=8, n_blocks=14)
+        sched = build_replica(RS.replace(slots=4, n_blocks=14),
+                              ap=ap, params=params)
         done = sched.run(reqs, max_steps=3000)
         assert all(r.output is not None for r in done), \
             "overcommitted pool failed to drain"

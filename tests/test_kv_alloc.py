@@ -19,9 +19,12 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.inference.kv_cache import BlockAllocator, TRASH_BLOCK
-from repro.inference.scheduler import ContinuousBatcher, Request
+from repro.inference.scheduler import Request
+from repro.inference.spec import ReplicaSpec, build_replica
 from repro.inference.speculative import Drafter
 from repro.models.transformer import make_plan, init_params
+
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=96)
 
 
 @pytest.fixture(scope="module")
@@ -120,13 +123,14 @@ def test_truncated_tails_never_leak_across_slots(tiny_lm):
                18) for i in range(3)]
     refs = {}
     for i, (p, n) in enumerate(protos):
-        s1 = ContinuousBatcher(ap, params, slots=1, s_max=96)
+        s1 = build_replica(RS.replace(slots=1), ap=ap, params=params)
         r = Request(rid=i, prompt=p, max_new=n)
         s1.run([r])
         refs[i] = r.output
-    sched = ContinuousBatcher(
-        ap, params, slots=3, s_max=96, block_size=4, n_blocks=25,
-        spec_mode="replay", spec_k=4, drafter=_JunkDrafter(cfg.vocab_size))
+    sched = build_replica(
+        RS.replace(block_size=4, n_blocks=25, spec_mode="replay",
+                   spec_k=4),
+        ap=ap, params=params, drafter=_JunkDrafter(cfg.vocab_size))
     done = sched.run([Request(rid=i, prompt=p, max_new=n, arrival_s=0.0)
                       for i, (p, n) in enumerate(protos)])
     m = sched.metrics(done)

@@ -8,11 +8,13 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models.transformer import make_plan, init_params
-from repro.inference.engine import InferenceEngine
 from repro.inference.kv_cache import BlockAllocator, TRASH_BLOCK
-from repro.inference.scheduler import ContinuousBatcher, Request, make_trace
+from repro.inference.scheduler import Request, make_trace
+from repro.inference.spec import ReplicaSpec, build_engine, build_replica
 from repro.inference.speculative import (AdaptiveK, NGramDrafter,
                                          ReplayDrafter, make_drafter)
+
+RS = ReplicaSpec(arch="llama3.2-1b", slots=3, s_max=96)
 
 
 @pytest.fixture(scope="module")
@@ -116,8 +118,9 @@ def test_block_allocator_truncate():
 
 
 def _trace_outputs(ap, params, vocab, *, n=8, mean_out=6, rate=4.0,
-                   seed=2, **kw):
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, **kw)
+                   seed=2, drafter=None, **kw):
+    sched = build_replica(RS.replace(**kw), ap=ap, params=params,
+                          drafter=drafter)
     reqs = make_trace(n, mean_in=10, mean_out=mean_out, rate=rate,
                       vocab=vocab, seed=seed)
     done = sched.run(reqs)
@@ -128,15 +131,17 @@ def _trace_outputs(ap, params, vocab, *, n=8, mean_out=6, rate=4.0,
 def test_engine_spec_generate_matches_plain(tiny_lm):
     cfg, ap, params = tiny_lm
     prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 12))
-    ref = InferenceEngine(ap, params, s_max=64).generate(prompts, 10)
+    ref = build_engine(RS.replace(s_max=64), ap=ap,
+                       params=params).generate(prompts, 10)
     for k in (2, 4, 8):
-        res = InferenceEngine(ap, params, s_max=64, spec_mode="ngram",
-                              spec_k=k).generate(prompts, 10)
+        res = build_engine(RS.replace(s_max=64, spec_mode="ngram",
+                                      spec_k=k), ap=ap,
+                           params=params).generate(prompts, 10)
         np.testing.assert_array_equal(ref.new_tokens, res.new_tokens)
     # paged engine cache under spec
-    res_p = InferenceEngine(ap, params, s_max=64, block_size=16,
-                            spec_mode="ngram", spec_k=4
-                            ).generate(prompts, 10)
+    res_p = build_engine(RS.replace(s_max=64, block_size=16,
+                                    spec_mode="ngram", spec_k=4),
+                         ap=ap, params=params).generate(prompts, 10)
     np.testing.assert_array_equal(ref.new_tokens, res_p.new_tokens)
 
 
@@ -145,7 +150,8 @@ def test_engine_spec_rejects_non_dense():
     ap = make_plan(cfg, 1)
     params = init_params(jax.random.PRNGKey(0), ap)
     with pytest.raises(ValueError):
-        InferenceEngine(ap, params, s_max=64, spec_mode="ngram")
+        build_engine(ReplicaSpec(arch="rwkv6-7b", s_max=64,
+                                 spec_mode="ngram"), ap=ap, params=params)
 
 
 def test_batcher_spec_trace_matches_plain(tiny_lm):
@@ -174,11 +180,11 @@ def test_batcher_spec_max_new_edges(tiny_lm):
     reqs = [Request(rid=i, prompt=prompt.copy(), max_new=mn, arrival_s=0.0)
             for i, mn in enumerate((1, 2, 5, 40))]
     ref = {}
-    eng = InferenceEngine(ap, params, s_max=96)
+    eng = build_engine(RS, ap=ap, params=params)
     for r in reqs:
         ref[r.rid] = eng.generate(r.prompt[None], r.max_new).new_tokens[0]
-    sched = ContinuousBatcher(ap, params, slots=4, s_max=96,
-                              spec_mode="ngram", spec_k=8)
+    sched = build_replica(RS.replace(slots=4, spec_mode="ngram",
+                                     spec_k=8), ap=ap, params=params)
     done = sched.run([Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
                       for r in reqs])
     for r in done:
@@ -197,7 +203,8 @@ def test_batcher_spec_admit_at_capacity_edge(tiny_lm):
         0, cfg.vocab_size, s_max - 1).astype(np.int32)
 
     def run(**kw):
-        sched = ContinuousBatcher(ap, params, slots=2, s_max=s_max, **kw)
+        sched = build_replica(RS.replace(slots=2, s_max=s_max, **kw),
+                              ap=ap, params=params)
         r = Request(rid=0, prompt=prompt.copy(), max_new=8)
         sched.run([r])
         return r.output
@@ -238,11 +245,12 @@ def test_spec_preemption_rollback_correctness(tiny_lm):
     protos = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                                  16).astype(np.int32),
                       max_new=40, arrival_s=0.0) for i in range(3)]
-    eng = InferenceEngine(ap, params, s_max=96)
+    eng = build_engine(RS, ap=ap, params=params)
     ref = {r.rid: eng.generate(r.prompt[None], r.max_new).new_tokens[0]
            for r in protos}
-    sched = ContinuousBatcher(ap, params, slots=3, s_max=96, block_size=8,
-                              n_blocks=13, spec_mode="ngram", spec_k=4)
+    sched = build_replica(RS.replace(block_size=8, n_blocks=13,
+                                     spec_mode="ngram", spec_k=4),
+                          ap=ap, params=params)
     done = sched.run([Request(rid=r.rid, prompt=r.prompt,
                               max_new=r.max_new) for r in protos])
     m = sched.metrics(done)
@@ -279,9 +287,10 @@ def test_spec_sampled_deterministic_under_seed(tiny_lm):
     cfg, ap, params = tiny_lm
 
     def run(seed):
-        sched = ContinuousBatcher(ap, params, slots=2, s_max=96,
-                                  temperature=1.5, top_k=20, seed=seed,
-                                  spec_mode="ngram", spec_k=4)
+        sched = build_replica(RS.replace(slots=2, temperature=1.5,
+                                         top_k=20, seed=seed,
+                                         spec_mode="ngram", spec_k=4),
+                              ap=ap, params=params)
         reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32) + i,
                         max_new=12, arrival_s=0.0) for i in range(3)]
         return {r.rid: r.output for r in sched.run(reqs)}
