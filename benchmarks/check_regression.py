@@ -13,6 +13,8 @@ baselines and fail on drift.
          --fresh-faults BENCH_faults.json] \\
         [--baseline-router base/BENCH_router.json \\
          --fresh-router BENCH_router.json] \\
+        [--baseline-prefix base/BENCH_prefix.json \\
+         --fresh-prefix BENCH_prefix.json] \\
         [--threshold 0.25]
 
 What is compared (chosen to be meaningful on shared CI runners):
@@ -43,6 +45,11 @@ What is compared (chosen to be meaningful on shared CI runners):
   (goodput fraction, retries, re-prefills, quarantines, sheds) are
   gated here so a recovery-path change cannot silently alter the
   fault response.
+* ``BENCH_prefix.json`` (optional) — prefix-cache hit rate, spliced
+  prompt tokens, and prefill-step reduction per (shared_frac, slots)
+  cell.  Bitwise on==off parity and hit-rate monotonicity in the
+  sharing fraction are asserted inside the bench; the deterministic
+  per-cell counters are gated here.
 * ``BENCH_router.json`` (optional) — placement-policy A/B per
   (trace, policy) cell on the 2-replica fleet.  Placement runs on the
   shared logical clock, so per-replica placements, load imbalance, and
@@ -86,6 +93,15 @@ FAULT_FIELDS = ("goodput_frac", "goodput_tok_per_step", "ttft_steps_p99",
                 "steps", "total_new_tokens", "completed", "shed_requests",
                 "wasted_tokens", "handoff_retries", "handoff_reprefills",
                 "quarantines")
+# Prefix-cache cells: the trace, the trie walk, and the chunk-aligned
+# splice cap are all seeded/deterministic, so hit counts and
+# tokens-saved are exact; a splice-policy change that loses hits (or a
+# trie leak that gains phantom ones) must show here.  Bitwise parity and
+# frac-monotonicity are asserted inside the bench itself.
+PREFIX_FIELDS = ("prefix_hits", "prefix_tokens_saved", "prefix_hit_rate",
+                 "prefill_chunks_skipped", "ar_bytes_saved", "steps",
+                 "step_ratio", "total_new_tokens", "completed",
+                 "peak_kv_tokens")
 # Router A/B cells: placement is a pure function of the shared logical
 # clock, so per-replica placements and the merged step-domain fleet
 # metrics are deterministic.  A policy change that shifts traffic or
@@ -130,6 +146,10 @@ def _fault_key(row: Dict) -> tuple:
 
 def _router_key(row: Dict) -> tuple:
     return (row.get("trace"), row.get("policy"))
+
+
+def _prefix_key(row: Dict) -> tuple:
+    return (row.get("shared_frac"), row.get("slots"))
 
 
 def _check_rows(base_rows: List[Dict], fresh_rows: List[Dict], key_fn,
@@ -208,6 +228,8 @@ def main(argv=None) -> int:
     p.add_argument("--fresh-faults", default=None)
     p.add_argument("--baseline-router", default=None)
     p.add_argument("--fresh-router", default=None)
+    p.add_argument("--baseline-prefix", default=None)
+    p.add_argument("--fresh-prefix", default=None)
     p.add_argument("--threshold", type=float, default=0.25,
                    help="max allowed relative drift (default 0.25)")
     args = p.parse_args(argv)
@@ -234,6 +256,10 @@ def main(argv=None) -> int:
         _check_rows(_load(args.baseline_router)["rows"],
                     _load(args.fresh_router)["rows"], _router_key,
                     ROUTER_FIELDS, args.threshold, "router", failures)
+    if args.baseline_prefix and args.fresh_prefix:
+        _check_rows(_load(args.baseline_prefix)["rows"],
+                    _load(args.fresh_prefix)["rows"], _prefix_key,
+                    PREFIX_FIELDS, args.threshold, "prefix", failures)
 
     if failures:
         print(f"[check_regression] FAIL ({len(failures)} violations):")

@@ -6,8 +6,10 @@ from .engine import InferenceEngine, GenerationResult
 from .disagg import DisaggCoordinator, DisaggMetrics, PrefillPool
 from .kv_cache import (BlockAllocator, CacheStats, KVBundle, export_slot,
                        heads_to_slots, paged_geometry, slots_to_heads)
+from .prefix_cache import PrefixCache
 from .router import Router, RouterMetrics, ReplicaLoad
-from .scheduler import ContinuousBatcher, Request, ServeMetrics, make_trace
+from .scheduler import (ContinuousBatcher, Request, ServeMetrics,
+                        make_prefix_trace, make_trace)
 from .spec import (ReplicaSpec, ServeSpec, SpecError, ROUTER_POLICIES,
                    build_engine, build_prefill_pool, build_replica,
                    make_injector)
@@ -17,7 +19,8 @@ from .simulator import (ChipSpec, A100, GH200, V5E, ClusterSim,
                         simulate_batch_latency, simulate_trace)
 
 __all__ = ["InferenceEngine", "GenerationResult", "ContinuousBatcher",
-           "Request", "ServeMetrics", "make_trace", "BlockAllocator",
+           "Request", "ServeMetrics", "make_trace", "make_prefix_trace",
+           "PrefixCache", "BlockAllocator",
            "CacheStats", "paged_geometry", "ChipSpec", "A100", "GH200",
            "V5E", "ClusterSim", "simulate_batch_latency", "simulate_trace",
            "Drafter", "NGramDrafter", "ModelDrafter", "ReplayDrafter",

@@ -34,6 +34,16 @@ Invariants this module (and everything downstream) relies on:
   only re-read through some slot's table after that slot has overwritten
   every position its attention mask exposes (DESIGN.md §7) — the same
   invariant that makes chunk-padding and inactive-slot writes harmless.
+* **refcounted sharing (copy-on-write, DESIGN.md §14)**: a physical
+  block may appear in several slots' tables at once (shared prompt
+  prefix) and/or be *held* externally (the prefix trie).  A block
+  returns to the free list only when its slot refcount **and** its hold
+  count both reach zero, so ``free``/``preempt``/``truncate`` of one
+  sharer can never recycle a block a neighbour still reads.  A slot must
+  never write a block it does not own exclusively — writers call
+  :meth:`BlockAllocator.fork_for_write` first, which swaps a private
+  copy into that slot's table (the caller copies the device contents in
+  the same transaction).
 
 This module also owns the **KV handoff format** for disaggregated
 prefill/decode serving (DESIGN.md §9): :class:`KVBundle` is a dense
@@ -114,6 +124,14 @@ class BlockAllocator:
         # LIFO free list (reuse hot blocks first); block 0 is never free.
         self._free: List[int] = list(range(n_blocks - 1, TRASH_BLOCK, -1))
         self._owned: List[List[int]] = [[] for _ in range(slots)]
+        # per-block slot refcount: how many slot tables reference b.  A
+        # freshly allocated block has ref 1; share() raises it.
+        self._ref = np.zeros((n_blocks,), np.int64)
+        # external holds (prefix-trie pins): block -> hold count.  Held
+        # blocks stay off the free list even with zero slot refs.
+        self._held: Dict[int, int] = {}
+        # called with {old: new} on every defragment (trie remap et al.)
+        self._remap_hooks: List = []
         self._tokens = np.zeros((slots,), np.int64)  # occupied positions
         self.table = np.full((slots, max_blocks_per_slot), TRASH_BLOCK,
                              np.int32)
@@ -150,6 +168,20 @@ class BlockAllocator:
         that is not actually needed can never fail.)"""
         return self.blocks_for(n_tokens) > len(self._owned[slot])
 
+    def slot_refs(self, block: int) -> int:
+        """How many slot tables reference ``block`` (0 for free blocks)."""
+        return int(self._ref[block])
+
+    def held_count(self, block: int) -> int:
+        """External (trie) hold count on ``block``."""
+        return self._held.get(block, 0)
+
+    def is_exclusive(self, slot: int, idx: int) -> bool:
+        """True iff ``slot`` may write its ``idx``-th block in place:
+        exactly one slot ref (this slot's) and no external holds."""
+        b = self._owned[slot][idx]
+        return int(self._ref[b]) == 1 and b not in self._held
+
     def stats(self) -> CacheStats:
         return CacheStats(
             n_blocks=self.n_blocks, block_size=self.block_size,
@@ -178,6 +210,7 @@ class BlockAllocator:
             return False
         for _ in range(max(grow, 0)):
             b = self._free.pop()
+            self._ref[b] = 1
             self.table[slot, len(own)] = b
             own.append(b)
             self.allocations += 1
@@ -185,6 +218,93 @@ class BlockAllocator:
         self._tokens[slot] = max(self._tokens[slot], n_tokens)
         self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
         return True
+
+    # -- sharing (copy-on-write) -------------------------------------------
+
+    def share(self, slot: int, blocks) -> None:
+        """Point an *empty* ``slot``'s table at existing live blocks.
+
+        The prefix-splice primitive: an admitted request whose prompt
+        matched ``len(blocks)`` trie blocks takes a reference on each —
+        the blocks become the slot's leading table entries, and ``ensure``
+        then grows only the private suffix.  Each shared block's refcount
+        rises by one; nothing is copied.  The slot must own nothing (a
+        fresh admission) and every block must be live (slot-referenced or
+        held) — a free-list block has undefined K/V.
+        """
+        own = self._owned[slot]
+        assert not own, f"share() into non-empty slot {slot}"
+        blocks = list(blocks)
+        if len(blocks) > self.max_blocks:
+            raise ValueError(f"sharing {len(blocks)} blocks > max_blocks="
+                             f"{self.max_blocks}")
+        for b in blocks:
+            assert b != TRASH_BLOCK, "sharing the trash block"
+            assert self._ref[b] > 0 or b in self._held, \
+                f"sharing dead block {b}"
+        for i, b in enumerate(blocks):
+            self._ref[b] += 1
+            self.table[slot, i] = b
+            own.append(b)
+            self.version += 1
+
+    def fork_for_write(self, slot: int, idx: int) -> Optional[Tuple[int, int]]:
+        """Give ``slot`` a private copy of its ``idx``-th block.
+
+        Returns ``None`` when the block is already exclusive (write in
+        place).  Otherwise pops a free block, moves this slot's reference
+        onto it, and returns ``(old_phys, new_phys)`` — the caller MUST
+        copy the device K/V ``old -> new`` before any divergent write, in
+        the same transaction as the table upload.  Raises RuntimeError
+        when the free list is empty (callers reclaim trie holds first, or
+        skip the write).
+        """
+        own = self._owned[slot]
+        b = own[idx]
+        if self._ref[b] == 1 and b not in self._held:
+            return None
+        if not self._free:
+            raise RuntimeError(
+                f"fork_for_write: no free block to copy shared block {b}")
+        new = self._free.pop()
+        self._ref[b] -= 1
+        self._ref[new] = 1
+        own[idx] = new
+        self.table[slot, idx] = new
+        self.allocations += 1
+        self.version += 1
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
+        return (b, new)
+
+    def hold(self, blocks) -> None:
+        """Take an external (trie) hold on each block: it stays off the
+        free list even when every slot releases it.  Blocks must be live
+        or just-released by the caller in the same transaction."""
+        for b in blocks:
+            assert b != TRASH_BLOCK, "holding the trash block"
+            assert b not in self._free, f"holding free block {b}"
+            self._held[b] = self._held.get(b, 0) + 1
+
+    def release(self, blocks) -> List[int]:
+        """Drop one external hold per block; blocks whose refcount and
+        hold count both hit zero go back on the free list.  Returns the
+        blocks actually freed (the trie's eviction bookkeeping)."""
+        freed: List[int] = []
+        for b in blocks:
+            n = self._held[b] - 1
+            if n:
+                self._held[b] = n
+            else:
+                del self._held[b]
+                if self._ref[b] == 0:
+                    self._free.append(b)
+                    freed.append(b)
+        return freed
+
+    def register_remap_hook(self, fn) -> None:
+        """``fn(old_to_new: Dict[int, int])`` is invoked on every
+        defragment so external block indices (the trie's) stay valid."""
+        self._remap_hooks.append(fn)
 
     def reset_stats(self) -> None:
         """Zero the trace-scoped counters (peak/preemptions/allocations/
@@ -203,18 +323,31 @@ class BlockAllocator:
             n_tokens == 0, (slot, n_tokens)
         self._tokens[slot] = max(self._tokens[slot], n_tokens)
 
+    def _drop_ref(self, block: int) -> bool:
+        """Drop one slot reference; True iff the block went back on the
+        free list (refcount and hold count both zero)."""
+        self._ref[block] -= 1
+        assert self._ref[block] >= 0, f"refcount underflow on {block}"
+        if self._ref[block] == 0 and block not in self._held:
+            self._free.append(block)
+            return True
+        return False
+
     def free(self, slot: int) -> int:
-        """Release every block of ``slot``; its table row reverts to trash.
-        Returns the number of blocks released."""
+        """Drop ``slot``'s reference on every block it holds; its table
+        row reverts to trash.  Blocks shared with another slot or held by
+        the trie survive — returns the number actually released to the
+        free list."""
         own = self._owned[slot]
-        n = len(own)
+        n = 0
         # LIFO: freed blocks go back on top, most recently used first.
-        self._free.extend(reversed(own))
+        for b in reversed(own):
+            n += self._drop_ref(b)
+        if own:
+            self.version += 1
         own.clear()
         self.table[slot, :] = TRASH_BLOCK
         self._tokens[slot] = 0
-        if n:
-            self.version += 1
         return n
 
     def preempt(self, slot: int) -> int:
@@ -236,14 +369,16 @@ class BlockAllocator:
         keep = self.blocks_for(n_tokens)
         own = self._owned[slot]
         tail = own[keep:]
+        n = 0
         if tail:
             del own[keep:]
             # LIFO: rejected-tail blocks are the hottest, reuse them first.
-            self._free.extend(reversed(tail))
+            for b in reversed(tail):
+                n += self._drop_ref(b)
             self.table[slot, keep:] = TRASH_BLOCK
             self.version += 1
         self._tokens[slot] = min(int(self._tokens[slot]), n_tokens)
-        return len(tail)
+        return n
 
     # -- defragmentation ---------------------------------------------------
 
@@ -255,18 +390,30 @@ class BlockAllocator:
         same transaction as uploading the rewritten ``self.table``.  Returns
         None when already compact (no device work needed).
         """
-        live = [b for own in self._owned for b in own]
+        # Live = every block some table or hold still references; a block
+        # shared by k slots (or slot+trie) is live ONCE — it gets exactly
+        # one new index and every referencing table maps through it.
+        live: List[int] = []
+        seen = set()
+        for own in self._owned:
+            for b in own:
+                if b not in seen:
+                    seen.add(b)
+                    live.append(b)
+        for b in sorted(self._held):       # held-only blocks (no slot ref)
+            if b not in seen:
+                seen.add(b)
+                live.append(b)
         if sorted(live) == list(range(1, len(live) + 1)):
             return None
         old_to_new = {TRASH_BLOCK: TRASH_BLOCK}
-        nxt = 1
         perm = np.empty((self.n_blocks,), np.int32)
         perm[TRASH_BLOCK] = TRASH_BLOCK
-        for own in self._owned:
-            for i, b in enumerate(own):
-                old_to_new[b] = nxt
-                perm[nxt] = b
-                nxt += 1
+        nxt = 1
+        for b in live:
+            old_to_new[b] = nxt
+            perm[nxt] = b
+            nxt += 1
         # leftover physical indices map from the remaining old blocks
         rest = [b for b in range(1, self.n_blocks) if b not in old_to_new]
         for new, old in zip(range(nxt, self.n_blocks), rest):
@@ -275,21 +422,45 @@ class BlockAllocator:
             self._owned[s] = [old_to_new[b] for b in own]
             for i, b in enumerate(self._owned[s]):
                 self.table[s, i] = b
+        new_ref = np.zeros_like(self._ref)
+        for old, new in old_to_new.items():
+            new_ref[new] = self._ref[old]
+        self._ref = new_ref
+        self._held = {old_to_new[b]: c for b, c in self._held.items()}
         self._free = list(range(self.n_blocks - 1, nxt - 1, -1))
         self.defrags += 1
         self.version += 1
+        for fn in self._remap_hooks:
+            fn(old_to_new)
         return perm
 
     # -- invariant checking (tests / debug) --------------------------------
 
     def check(self) -> None:
-        """Assert the free list + ownership exactly partition the pool."""
+        """Assert refcounts, holds, and the free list exactly partition
+        the pool: every block 1..n-1 is either live (slot refcount ==
+        its table occurrences, and/or positively held) or appears on the
+        free list exactly once — never both, never neither."""
         owned = [b for own in self._owned for b in own]
         assert TRASH_BLOCK not in owned, "trash block allocated"
         assert TRASH_BLOCK not in self._free, "trash block on free list"
-        all_b = sorted(owned + self._free)
-        assert all_b == list(range(1, self.n_blocks)), \
-            f"pool leak/dup: {len(owned)} owned + {len(self._free)} free"
+        assert TRASH_BLOCK not in self._held, "trash block held"
+        assert self._ref[TRASH_BLOCK] == 0, "trash block refcounted"
+        # refcount[b] == number of slot tables referencing b
+        counts = np.zeros((self.n_blocks,), np.int64)
+        for b in owned:
+            counts[b] += 1
+        assert (counts == self._ref).all(), \
+            f"refcount drift: {np.flatnonzero(counts != self._ref)}"
+        for b, c in self._held.items():
+            assert c > 0, f"zero hold entry for {b}"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "duplicate free blocks"
+        expect_free = {b for b in range(1, self.n_blocks)
+                       if counts[b] == 0 and b not in self._held}
+        assert free_set == expect_free, (
+            f"free-list drift: leaked={sorted(expect_free - free_set)} "
+            f"premature={sorted(free_set - expect_free)}")
         for s, own in enumerate(self._owned):
             got = list(self.table[s, :len(own)])
             assert got == own, f"slot {s} table mismatch"

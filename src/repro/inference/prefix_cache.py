@@ -1,0 +1,210 @@
+"""Token-prefix radix trie over paged KV blocks (DESIGN.md §14).
+
+At fleet scale most traffic shares long system/tool prompts, and every
+re-prefilled shared token pays the full TP all-reduce tax the paper
+fights to shrink — so the highest-leverage optimization is to not prefill
+shared tokens at all.  This module keys *physical KV blocks* by the
+prompt token IDs they cover: admission looks up the longest previously
+prefilled prefix of the incoming prompt, splices those blocks into the
+new slot's table via :meth:`BlockAllocator.share` (copy-on-write
+refcounts, ``kv_cache.py``), and chunk-prefills only the suffix.
+
+Layout: one trie node per KV block.  A node's edge key is the exact
+``block_size``-token group it covers, so a root-to-node path spells a
+prompt prefix of ``depth * block_size`` tokens and stores the physical
+block for each group.  Lookup is a dict-walk per block group — O(S/bs)
+with no per-token scanning, which is the point of block (radix)
+granularity over a per-token trie.
+
+Pinning: every resident node takes one external *hold* on its block
+(:meth:`BlockAllocator.hold`), keeping it off the free list after the
+admitting slot exits.  Eviction is LRU over nodes whose block has **zero
+slot references** — a node some live slot still maps is never evicted
+(its hold must outlive the sharer; dropping it early would let a later
+``free`` recycle a block mid-read).  Eviction is leaf-first: interior
+nodes become evictable once their subtree is gone, so a cold chain
+drains from the tail — and it runs *only synchronously inside admission
+or growth* (``capacity`` overflow after publish, or
+:meth:`reclaim` under allocation pressure), never on a background
+clock: between batcher steps the block/table state is frozen, which is
+what keeps device table uploads transactional (DESIGN.md §14).
+
+Determinism: greedy prefill is a pure function of the prompt tokens, so
+any block previously prefilled for token group ``g`` holds bit-identical
+K/V to what re-prefilling ``g`` at the same positions would write —
+splicing is exact, not approximate.  That also means duplicate blocks
+for the same group (two concurrent misses) are merely wasted capacity,
+never a correctness hazard; ``insert`` keeps the first-published block.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .kv_cache import BlockAllocator
+
+
+class _Node:
+    """One KV block's worth of prompt tokens (an edge in the radix trie)."""
+    __slots__ = ("key", "block", "parent", "children", "clock")
+
+    def __init__(self, key: Tuple[int, ...], block: int,
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.clock = 0
+
+
+class PrefixCache:
+    """Radix trie of published prompt blocks, pinned via allocator holds.
+
+    ``capacity``: max resident (held) blocks; inserts that push past it
+    trigger LRU eviction of unreferenced nodes.  ``None`` = bounded only
+    by the physical pool (reclaim under pressure still applies).
+    Registers itself as a defragment remap hook on construction, so node
+    block indices stay valid across :meth:`BlockAllocator.defragment`.
+    """
+
+    def __init__(self, alloc: BlockAllocator,
+                 capacity: Optional[int] = None):
+        self.alloc = alloc
+        self.block_size = alloc.block_size
+        self.capacity = capacity
+        self._root = _Node((), -1, None)
+        self._by_block: Dict[int, _Node] = {}
+        self._clock = 0
+        self.evictions = 0
+        alloc.register_remap_hook(self.remap)
+
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def held_blocks(self) -> int:
+        return len(self._by_block)
+
+    @property
+    def nodes(self) -> int:
+        return len(self._by_block)
+
+    def _groups(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        bs = self.block_size
+        n = len(tokens) // bs
+        return [tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+                for i in range(n)]
+
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Longest-prefix lookup: the physical blocks covering the most
+        leading *complete* block groups of ``tokens`` already resident.
+        Refreshes the LRU clock along the matched path."""
+        self._clock += 1
+        node = self._root
+        blocks: List[int] = []
+        for key in self._groups(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.clock = self._clock
+            blocks.append(child.block)
+            node = child
+        return blocks
+
+    # -- publication -------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Publish a prefilled prompt's complete block groups.
+
+        ``blocks``: the admitting slot's physical block for each group
+        (``alloc.table[slot]`` prefix).  Groups already resident keep
+        their first-published block (bit-identical contents — see module
+        docstring); new groups take a hold on the slot's block, making
+        it survive the slot.  Returns the number of newly pinned blocks.
+        May evict LRU unreferenced nodes to stay within ``capacity``.
+        """
+        self._clock += 1
+        node = self._root
+        new = 0
+        for key, b in zip(self._groups(tokens), blocks):
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, int(b), node)
+                self.alloc.hold([int(b)])
+                self._by_block[int(b)] = child
+                node.children[key] = child
+                new += 1
+            child.clock = self._clock
+            node = child
+        if self.capacity is not None and self.held_blocks > self.capacity:
+            self._evict_lru(self.held_blocks - self.capacity)
+        return new
+
+    # -- eviction ----------------------------------------------------------
+
+    def _evictable(self) -> List[_Node]:
+        """Leaves whose block no slot currently references."""
+        return [n for n in self._by_block.values()
+                if not n.children and self.alloc.slot_refs(n.block) == 0]
+
+    def _drop(self, node: _Node) -> int:
+        """Unlink one leaf and release its hold; returns blocks freed."""
+        assert not node.children
+        del node.parent.children[node.key]
+        del self._by_block[node.block]
+        self.evictions += 1
+        return len(self.alloc.release([node.block]))
+
+    def _evict_lru(self, n_nodes: int) -> int:
+        """Evict up to ``n_nodes`` unreferenced leaves, oldest clock
+        first (re-scanning as interior nodes become leaves)."""
+        dropped = 0
+        while dropped < n_nodes:
+            cands = self._evictable()
+            if not cands:
+                break
+            self._drop(min(cands, key=lambda nd: nd.clock))
+            dropped += 1
+        return dropped
+
+    def reclaim(self, n_blocks: int) -> int:
+        """Free at least ``n_blocks`` physical blocks by evicting LRU
+        unreferenced nodes; returns blocks actually freed.  Called by the
+        batcher under allocation pressure *before* it preempts a live
+        request — cold cache beats evicted traffic."""
+        freed = 0
+        while freed < n_blocks:
+            cands = self._evictable()
+            if not cands:
+                break
+            freed += self._drop(min(cands, key=lambda nd: nd.clock))
+        return freed
+
+    def invalidate_block(self, phys: int) -> int:
+        """Drop the node owning ``phys`` and its whole subtree (a
+        poisoned/scrubbed block invalidates every extension of its
+        prefix).  No-op if ``phys`` is not resident.  Returns nodes
+        dropped."""
+        node = self._by_block.get(phys)
+        if node is None:
+            return 0
+        stack, order = [node], []
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            stack.extend(n.children.values())
+        for n in reversed(order):          # leaves first
+            self._drop(n)
+        return len(order)
+
+    # -- defragment support ------------------------------------------------
+
+    def remap(self, old_to_new: Dict[int, int]) -> None:
+        """Rewrite node block indices after a defragment (allocator remap
+        hook) — each resident block moves exactly once."""
+        by_block: Dict[int, _Node] = {}
+        for b, node in self._by_block.items():
+            node.block = old_to_new[b]
+            by_block[node.block] = node
+        self._by_block = by_block
+
+
+__all__ = ["PrefixCache"]

@@ -67,6 +67,7 @@ from ..parallel.steps import (build_admit_chunk_step, build_admit_step,
 from .faults import FaultInjector
 from .kv_cache import (BlockAllocator, KVBundle, heads_to_slots,
                        paged_geometry)
+from .prefix_cache import PrefixCache
 from .speculative import AdaptiveK, Drafter, make_drafter
 
 
@@ -112,7 +113,8 @@ def request_sampling_key(seed: int, rid: int) -> jax.Array:
 
 
 def run_chunked_prefill(params, cache, prompt: np.ndarray, slot, chunk: int,
-                        mid_fn, final_fn, mid_rng, final_rng):
+                        mid_fn, final_fn, mid_rng, final_rng,
+                        start_chunk: int = 0):
     """Drive a prompt through the chunked-prefill executables into cache
     row ``slot``: intermediate chunks via the logits-free ``mid_fn``
     (``mid_rng`` untouched — nothing samples), the final chunk via
@@ -120,15 +122,23 @@ def run_chunked_prefill(params, cache, prompt: np.ndarray, slot, chunk: int,
     ``(S-1) % chunk``.  Shared by colocated admission
     (:meth:`ContinuousBatcher._admit`) and the disaggregated prefill pool
     — the bitwise-parity guarantee between those deployments depends on
-    this being ONE code path.  Returns (first_token_dev, cache)."""
+    this being ONE code path.  Returns (first_token_dev, cache).
+
+    ``start_chunk`` skips the leading chunks whose K/V the slot's table
+    already maps (a prefix-cache hit, DESIGN.md §14): chunk ``i`` writes
+    the same values at the same positions regardless of where the loop
+    starts, so a suffix prefill over spliced shared blocks is
+    bit-identical to the full one.  ``start_chunk`` must be < n_chunks —
+    the final chunk always runs (it samples the first token)."""
     S = int(prompt.shape[0])
     padded = np.zeros((-(-S // chunk) * chunk,), np.int32)
     padded[:S] = prompt
     n_chunks = padded.shape[0] // chunk
+    assert 0 <= start_chunk < n_chunks, (start_chunk, n_chunks)
     last = jnp.int32((S - 1) % chunk)
     slot = jnp.int32(slot)
     tok = None
-    for i in range(n_chunks):
+    for i in range(start_chunk, n_chunks):
         x = jnp.asarray(padded[None, i * chunk:(i + 1) * chunk])
         pos = jnp.arange(i * chunk, (i + 1) * chunk,
                          dtype=jnp.int32)[None]
@@ -215,6 +225,16 @@ class ServeMetrics:
     spec_autodisables: int = 0
     straggler_steps: int = 0
     wasted_tokens: int = 0
+    # prefix cache (DESIGN.md §14; zeros when ``prefix_cache="off"``):
+    # * ``prefix_lookups``      — admissions that consulted the trie.
+    # * ``prefix_hits``         — admissions that spliced >= 1 chunk.
+    # * ``prefix_tokens_saved`` — prompt tokens never re-prefilled (each
+    #   skipped an entire chunk of per-layer TP all-reduces).
+    # * ``prefix_hit_rate``     — hits / lookups.
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_tokens_saved: int = 0
+    prefix_hit_rate: float = 0.0
     # Retained per-request latency samples (logical steps) so a fleet
     # aggregation can recompute exact percentiles instead of averaging
     # per-replica p99s (see :meth:`merge`).  Excluded from ``to_dict`` —
@@ -294,6 +314,12 @@ class ServeMetrics:
             spec_autodisables=sum(m.spec_autodisables for m in parts),
             straggler_steps=sum(m.straggler_steps for m in parts),
             wasted_tokens=sum(m.wasted_tokens for m in parts),
+            prefix_lookups=sum(m.prefix_lookups for m in parts),
+            prefix_hits=sum(m.prefix_hits for m in parts),
+            prefix_tokens_saved=sum(m.prefix_tokens_saved for m in parts),
+            prefix_hit_rate=sum(m.prefix_hits for m in parts) /
+            sum(m.prefix_lookups for m in parts)
+            if sum(m.prefix_lookups for m in parts) else 0.0,
             ttft_steps_samples=ttft, tpot_steps_samples=tpot)
 
 
@@ -314,7 +340,9 @@ class ContinuousBatcher:
                  drafter: Optional[Drafter] = None,
                  injector: Optional[FaultInjector] = None,
                  deadline_s: Optional[float] = None,
-                 spec_autodisable_after: int = 0):
+                 spec_autodisable_after: int = 0,
+                 prefix_cache: str = "off",
+                 prefix_capacity: Optional[int] = None):
         """``spec_mode`` turns on speculative decoding: each engine step
         drafts ``spec_k`` tokens per slot (``"ngram"`` prompt-lookup,
         ``"draft"`` small model from ``configs.registry`` via
@@ -359,6 +387,33 @@ class ContinuousBatcher:
         # paging applies to the self-attention K/V only; attention-free
         # archs (rwkv) have fixed-size recurrent state and stay dense
         self.paged = block_size > 0 and not self.cfg.attn_free
+        # -- prefix cache (DESIGN.md §14) -----------------------------------
+        if prefix_cache not in ("off", "on"):
+            raise ValueError(f"unknown prefix_cache {prefix_cache!r}")
+        self.prefix_on = prefix_cache == "on"
+        if self.prefix_on:
+            if not self.paged:
+                raise ValueError("prefix_cache needs the paged KV layout "
+                                 "(block_size > 0, attention family) — "
+                                 "sharing is per physical block")
+            if self.cfg.family != "dense":
+                raise ValueError("prefix_cache rides the chunked suffix-"
+                                 "prefill path: dense families only, not "
+                                 f"{self.cfg.family!r}")
+            if kv_quant:
+                raise ValueError("prefix_cache is incompatible with "
+                                 "kv_quant (int8 cache is dense-layout, "
+                                 "full-admission only)")
+            if admit_chunk < 1 or admit_chunk % block_size:
+                # a spliced prefix must end exactly where a chunk starts
+                raise ValueError(f"admit_chunk={admit_chunk} must be a "
+                                 f"positive multiple of "
+                                 f"block_size={block_size} "
+                                 "for prefix_cache")
+            if s_max % admit_chunk:
+                raise ValueError(f"s_max={s_max} must be a multiple of "
+                                 f"admit_chunk={admit_chunk} for "
+                                 "prefix_cache")
         if kv_quant:
             # the unsupported combinations all die deep inside jitted code
             # (prefill_chunk / init_cache asserts) — reject them here with
@@ -422,14 +477,23 @@ class ContinuousBatcher:
         self._admit_full: Dict[int, Any] = {}   # prompt_len -> jitted fn
         self._splice_fns: Dict[int, Any] = {}   # handoff len -> jitted fn
         self._admit_chunked = None
-        if admit_mode == "chunked":
+        if admit_mode == "chunked" or self.prefix_on:
             # final chunk samples the first token; intermediate chunks run
-            # a logits-free executable (no vocab head / TP gather)
+            # a logits-free executable (no vocab head / TP gather).  A
+            # prefix-cache hit prefills its suffix through these even
+            # under admit_mode="full" (chunked == full bitwise, so the
+            # hit/miss paths emit identical tokens).
             self._admit_chunked = build_admit_chunk_step(
                 ap, ctx, mesh, chunk=admit_chunk, **self._admit_kw).jit()
             self._admit_chunked_mid = build_admit_chunk_step(
                 ap, ctx, mesh, chunk=admit_chunk, sample=False,
                 **self._admit_kw).jit()
+        self.prefix: Optional[PrefixCache] = None
+        if self.prefix_on:
+            self.prefix = PrefixCache(self.alloc, capacity=prefix_capacity)
+        self._prefix_lookups = 0
+        self._prefix_hits = 0
+        self._prefix_tokens_saved = 0
         if self.paged:
             self.cache["block_tbl"] = jnp.asarray(self.alloc.table)
 
@@ -506,20 +570,66 @@ class ContinuousBatcher:
             self._admit_full[prompt_len] = fn
         return fn
 
+    def _prefix_match(self, prompt: np.ndarray) -> List[int]:
+        """Longest resident prefix of ``prompt``, truncated to what the
+        suffix-prefill can actually skip: whole ``admit_chunk`` multiples
+        (the spliced prefix must end exactly where a chunk starts) and at
+        most ``S-1`` tokens (the final chunk always recomputes — it
+        samples the first token).  Returns the physical blocks to splice.
+        """
+        S = int(prompt.shape[0])
+        self._prefix_lookups += 1
+        blocks = self.prefix.match(prompt)
+        cap = ((S - 1) // self.admit_chunk) * self.admit_chunk
+        shared = min(len(blocks) * self.block_size, cap)
+        shared = (shared // self.admit_chunk) * self.admit_chunk
+        return blocks[:shared // self.block_size]
+
     def _admit(self, slot: int, req: Request, now: float) -> bool:
         """Prefill one request into ``slot`` (on-device splice).  Returns
-        False when the paged pool cannot hold the prompt right now."""
+        False when the paged pool cannot hold the prompt right now.
+
+        With the prefix cache on, admission first splices the longest
+        resident prompt prefix (``share``: refcounts up, zero copies) and
+        chunk-prefills only the suffix; after prefill, every fully-
+        prompt-covered block is published back to the trie.  Ordering
+        matters: the share happens *before* any trie reclaim, so
+        allocation pressure can never evict the blocks just matched."""
         S = int(req.prompt.shape[0])
         if S + 1 > self.s_max:
             raise ValueError(f"prompt len {S} + 1 exceeds s_max={self.s_max}")
+        shared_blocks: List[int] = []
+        if self.prefix is not None:
+            shared_blocks = self._prefix_match(req.prompt)
+            if shared_blocks:
+                self.alloc.share(slot, shared_blocks)
         if self.alloc is not None:
             # +1: the first decode write lands at position S
+            if self.prefix is not None \
+                    and not self.alloc.can_allocate(slot, S + 1):
+                # cold trie blocks before live traffic: reclaim only what
+                # the growth is short (matched blocks are slot-referenced
+                # now — unevictable)
+                need = self.alloc.blocks_for(S + 1) - \
+                    len(self.alloc.owned(slot))
+                self.prefix.reclaim(need - self.alloc.free_blocks)
             if not self.alloc.ensure(slot, S + 1):
+                if shared_blocks:
+                    self.alloc.free(slot)   # drop just-taken references
                 return False
             self._sync_table()
         base = request_sampling_key(self.seed, req.rid)
         first = jax.random.fold_in(base, 0)   # token 0 of the chain
-        if self.admit_mode == "chunked":
+        if shared_blocks:
+            n_shared = len(shared_blocks) * self.block_size
+            self._prefix_hits += 1
+            self._prefix_tokens_saved += n_shared
+            tok, self.cache = run_chunked_prefill(
+                self.params, self.cache, req.prompt, slot,
+                self.admit_chunk, self._admit_chunked_mid,
+                self._admit_chunked, self._rng, first,
+                start_chunk=n_shared // self.admit_chunk)
+        elif self.admit_mode == "chunked":
             tok, self.cache = run_chunked_prefill(
                 self.params, self.cache, req.prompt, slot,
                 self.admit_chunk, self._admit_chunked_mid,
@@ -528,6 +638,14 @@ class ContinuousBatcher:
             tok, self.cache = self._admit_fn(S)(
                 self.params, self.cache, jnp.asarray(req.prompt[None]),
                 jnp.int32(slot), first)
+        if self.prefix is not None:
+            # publish before activation (max_new == 1 releases the slot
+            # inside _activate): every block whose positions are all
+            # prompt is pinned — decode writes land at >= S, never here
+            n_pub = S // self.block_size
+            if n_pub:
+                self.prefix.insert(req.prompt,
+                                   self.alloc.owned(slot)[:n_pub])
         self._activate(slot, req, int(np.asarray(tok)[0]), S, now,
                        rng_key=base)
         return True
@@ -675,7 +793,24 @@ class ContinuousBatcher:
         p = max(int(self.positions[slot]) - 1, 0)
         nan = jnp.asarray(jnp.nan, self.cache["k"].dtype)
         if self.paged:
-            phys = int(self.alloc.table[slot, p // self.block_size])
+            bidx = p // self.block_size
+            if not self.alloc.is_exclusive(slot, bidx):
+                # shared/held block (a prompt block the trie or a sharer
+                # still reads): copy-on-write before the divergent poke —
+                # fault injection must corrupt only its victim.  If no
+                # free block exists even after trie reclaim, skip the
+                # injection entirely (never corrupt a neighbour).
+                if not self.alloc.free_blocks and self.prefix is not None:
+                    self.prefix.reclaim(1)
+                if not self.alloc.free_blocks:
+                    return
+                old, new = self.alloc.fork_for_write(slot, bidx)
+                self.cache["k"] = self.cache["k"].at[:, new].set(
+                    self.cache["k"][:, old])
+                self.cache["v"] = self.cache["v"].at[:, new].set(
+                    self.cache["v"][:, old])
+                self._sync_table()
+            phys = int(self.alloc.table[slot, bidx])
             off = p % self.block_size
             self.cache["k"] = self.cache["k"].at[:, phys, off].set(nan)
         else:
@@ -695,7 +830,13 @@ class ContinuousBatcher:
         unmasked positions are rewritten before they are read (the same
         write-ordering invariant recompute-from-scratch relies on)."""
         if self.paged:
-            blocks = list(self.alloc.owned(slot))
+            # exclusively-owned blocks only: a slot never writes a shared
+            # or trie-held block (fork-before-write, _poison_slot), so
+            # contamination is confined to its private blocks — and a
+            # shared block holds live sharers' clean prompt K/V that a
+            # zero-fill would destroy mid-read.
+            blocks = [b for i, b in enumerate(self.alloc.owned(slot))
+                      if self.alloc.is_exclusive(slot, i)]
             if blocks:
                 idx = jnp.asarray(blocks, jnp.int32)
                 self.cache["k"] = self.cache["k"].at[:, idx].set(0)
@@ -721,6 +862,14 @@ class ContinuousBatcher:
             self._evict(slot)
             return
         while not self.alloc.ensure(slot, n_tokens):
+            if self.prefix is not None:
+                # cold trie blocks go before live traffic: evict LRU
+                # unreferenced nodes first, preempt a request only when
+                # the trie has nothing left to give
+                need = self.alloc.blocks_for(n_tokens) - \
+                    len(self.alloc.owned(slot))
+                if self.prefix.reclaim(need - self.alloc.free_blocks) > 0:
+                    continue
             victim_ok = self._preempt_youngest()
             if not self.active_mask[slot]:
                 return  # we evicted ourselves
@@ -948,6 +1097,11 @@ class ContinuousBatcher:
         self._straggler_steps = self._spec_autodisables = 0
         self._wasted_tokens = 0
         self._preemptions = 0
+        # per-run prefix counters only — the trie itself persists across
+        # runs (warm cross-trace reuse is the feature)
+        self._prefix_lookups = 0
+        self._prefix_hits = 0
+        self._prefix_tokens_saved = 0
         self._shed = []
         self._spec_deny = set()
         self._spec_zero_acc[:] = 0
@@ -1111,6 +1265,11 @@ class ContinuousBatcher:
             spec_autodisables=self._spec_autodisables,
             straggler_steps=self._straggler_steps,
             wasted_tokens=self._wasted_tokens,
+            prefix_lookups=self._prefix_lookups,
+            prefix_hits=self._prefix_hits,
+            prefix_tokens_saved=self._prefix_tokens_saved,
+            prefix_hit_rate=self._prefix_hits / self._prefix_lookups
+            if self._prefix_lookups else 0.0,
             ttft_steps_samples=ttft, tpot_steps_samples=tpot)
 
 
@@ -1133,5 +1292,35 @@ def make_trace(n_requests: int, *, mean_in: int, mean_out: int,
     return reqs
 
 
+def make_prefix_trace(n_requests: int, *, prefix_len: int,
+                      shared_frac: float, mean_in: int, mean_out: int,
+                      rate: float, burstiness: float = 2.0, vocab: int = 97,
+                      seed: int = 0,
+                      clip_len: Optional[int] = None) -> List[Request]:
+    """A :func:`make_trace` trace where a ``shared_frac`` fraction of
+    requests open with one common ``prefix_len``-token system prompt —
+    the multi-tenant shared-prefix workload the prefix cache targets.
+
+    Sharing is decided by a fixed-seed per-request uniform draw against
+    the threshold, so raising ``shared_frac`` only *adds* shared requests
+    (never reshuffles which) — the monotonicity ``bench_prefix`` gates
+    on.  ``clip_len`` caps total prompt length (trim the unique tail)
+    so prefixed prompts still fit ``s_max - 1``.
+    """
+    rng = np.random.default_rng(seed + 0x5afe)
+    shared = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    u = rng.random(n_requests)
+    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, burstiness=burstiness, vocab=vocab,
+                      seed=seed)
+    for i, r in enumerate(reqs):
+        if u[i] < shared_frac:
+            r.prompt = np.concatenate([shared, r.prompt]).astype(np.int32)
+        if clip_len is not None and r.prompt.shape[0] > clip_len:
+            r.prompt = r.prompt[:clip_len]
+    return reqs
+
+
 __all__ = ["ContinuousBatcher", "Request", "ServeMetrics", "make_trace",
-           "run_chunked_prefill", "request_sampling_key"]
+           "make_prefix_trace", "run_chunked_prefill",
+           "request_sampling_key"]

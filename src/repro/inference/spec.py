@@ -41,6 +41,7 @@ ROUTER_POLICIES = ("round_robin", "least_queue", "ttft_aware")
 ADMIT_MODES = ("full", "chunked")
 SPEC_MODES = (None, "ngram", "draft", "replay")
 SERVE_MODES = ("batch", "trace")
+PREFIX_MODES = ("off", "on")
 
 
 class SpecError(ValueError):
@@ -73,6 +74,9 @@ class ReplicaSpec:
     kv_quant: bool = False
     admit_mode: str = "full"
     admit_chunk: int = 32
+    # -- prefix sharing (DESIGN.md §14) -----------------------------------
+    prefix_cache: str = "off"
+    prefix_capacity: Optional[int] = None   # max trie-pinned blocks
     # -- sampling ---------------------------------------------------------
     temperature: float = 0.0
     top_k: int = 0
@@ -171,6 +175,46 @@ class ReplicaSpec:
             if self.block_size and self.tp > 1:
                 bad("block_size with mode='batch' is local-path only "
                     "(use mode='trace' for mesh-path paging)")
+            if self.prefix_cache != "off":
+                bad("prefix_cache is trace-mode only (admission-time "
+                    "prefix splicing; the batch engine prefills once)")
+        if self.prefix_cache not in PREFIX_MODES:
+            bad(f"unknown prefix_cache={self.prefix_cache!r} (one of "
+                f"{PREFIX_MODES})")
+        if self.prefix_cache == "on":
+            # ordered before the kv_quant block so a prefix_cache +
+            # kv_quant combo is rejected naming prefix_cache (the field
+            # the user just added)
+            if not self.block_size:
+                bad("prefix_cache='on' needs the paged KV layout: set "
+                    f"block_size > 0 (got block_size={self.block_size}) "
+                    "— prefix sharing is per physical block")
+            if self.kv_quant:
+                bad("prefix_cache is incompatible with kv_quant (the "
+                    "int8 cache is dense-layout, full-admission only)")
+            if self.disagg:
+                bad("prefix_cache is incompatible with disagg: the "
+                    "decode pool admits via KV handoff, not prompts "
+                    "(colocated trace serving only)")
+            if self.admit_chunk < 1 or self.admit_chunk % self.block_size:
+                bad(f"admit_chunk={self.admit_chunk} must be a positive "
+                    f"multiple of block_size={self.block_size} for "
+                    "prefix_cache (a spliced prefix must end on a chunk "
+                    "boundary)")
+            if self.s_max % self.admit_chunk:
+                bad(f"s_max={self.s_max} must be a multiple of "
+                    f"admit_chunk={self.admit_chunk} for prefix_cache "
+                    "(hits prefill their suffix through the chunked "
+                    "executables)")
+            if self.prefix_capacity is not None \
+                    and self.prefix_capacity < 1:
+                bad(f"prefix_capacity={self.prefix_capacity} must be "
+                    ">= 1 (or None for pool-bounded)")
+            from ..configs import get_smoke
+            if get_smoke(self.arch).family != "dense":
+                bad("prefix_cache rides the chunked suffix-prefill path: "
+                    "dense (attention-only) families only, not "
+                    f"arch={self.arch!r}")
         if self.kv_quant:
             if self.admit_mode == "chunked":
                 bad("kv_quant is incompatible with admit_mode='chunked': "
@@ -246,7 +290,8 @@ class ServeSpec:
             ar_quant=ar_quant, slots=ns.slots, s_max=ns.s_max,
             block_size=ns.block_size, n_blocks=ns.n_blocks,
             kv_quant=ns.kv_quant, admit_mode=ns.admit_mode,
-            admit_chunk=ns.admit_chunk, temperature=ns.temperature,
+            admit_chunk=ns.admit_chunk, prefix_cache=ns.prefix_cache,
+            prefix_capacity=ns.prefix_capacity, temperature=ns.temperature,
             top_k=ns.top_k, seed=ns.seed, spec_mode=spec_mode,
             spec_k=ns.spec_k, spec_adaptive=ns.spec_adaptive,
             draft_arch=ns.draft_arch, fault_plan=ns.fault_plan,
@@ -398,7 +443,9 @@ def _build_batcher(spec: ReplicaSpec, *, ap, params, drafter, injector,
         spec_mode=spec.spec_mode, spec_k=spec.spec_k,
         spec_adaptive=spec.spec_adaptive, draft_arch=spec.draft_arch,
         drafter=drafter, injector=injector, deadline_s=deadline,
-        spec_autodisable_after=spec.spec_autodisable_after)
+        spec_autodisable_after=spec.spec_autodisable_after,
+        prefix_cache=spec.prefix_cache,
+        prefix_capacity=spec.prefix_capacity)
 
 
 def build_replica(spec: ReplicaSpec, *, ap=None, params=None, drafter=None,
@@ -466,5 +513,5 @@ def build_replica(spec: ReplicaSpec, *, ap=None, params=None, drafter=None,
 
 
 __all__ = ["ReplicaSpec", "ServeSpec", "SpecError", "ROUTER_POLICIES",
-           "build_replica", "build_engine", "build_prefill_pool",
-           "make_injector"]
+           "PREFIX_MODES", "build_replica", "build_engine",
+           "build_prefill_pool", "make_injector"]

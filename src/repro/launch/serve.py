@@ -50,9 +50,9 @@ import numpy as np
 from ..configs import get_config, get_smoke, ARCH_IDS
 from ..core.pcontext import AR_STRATEGIES, SEQ_PARALLEL_MODES
 from ..inference.router import Router
-from ..inference.scheduler import make_trace
-from ..inference.spec import (ROUTER_POLICIES, ServeSpec, SpecError,
-                              build_engine, build_replica)
+from ..inference.scheduler import make_prefix_trace, make_trace
+from ..inference.spec import (PREFIX_MODES, ROUTER_POLICIES, ServeSpec,
+                              SpecError, build_engine, build_replica)
 
 
 def _cfg(spec: ServeSpec):
@@ -89,6 +89,24 @@ def _write_json(m, json_out):
         with open(json_out, "w") as f:
             json.dump(m.to_dict(), f, indent=2, default=float)
         print(f"[serve]   metrics -> {json_out}")
+
+
+def _make_reqs(spec: ServeSpec, *, n_requests, mean_in, mean_out, rate,
+               shared_frac: float = 0.0, prefix_len: int = 32):
+    """The trace every trace-mode deployment replays: plain BurstGPT-style
+    (:func:`make_trace`), or the shared-system-prompt variant
+    (:func:`make_prefix_trace`) when ``--shared-frac`` > 0 — the same
+    trace either way for a given seed, so prefix-cache on/off runs are
+    comparable token-for-token."""
+    r = spec.replica
+    cfg = _cfg(spec)
+    if shared_frac > 0.0:
+        return make_prefix_trace(
+            n_requests, prefix_len=prefix_len, shared_frac=shared_frac,
+            mean_in=mean_in, mean_out=mean_out, rate=rate,
+            vocab=cfg.vocab_size, seed=r.seed, clip_len=r.s_max - 1)
+    return make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
+                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
 
 
 def run_batch(spec: ServeSpec, *, batch: int = 4, prompt_len: int = 16,
@@ -131,6 +149,8 @@ def _print_trace_metrics(spec: ServeSpec, m, slots: int):
     layout = f"paged(bs={r.block_size})" if r.block_size else "dense"
     if r.kv_quant:
         layout += "+kv8"
+    if r.prefix_cache == "on":
+        layout += "+prefix"
     print(f"[serve] trace {r.arch} [{layout} ar={ar} tp={r.tp}"
           f"{' overlap' if r.overlap else ''}]: "
           f"{m.completed}/{m.requests} reqs, {m.total_new_tokens} tokens "
@@ -145,6 +165,12 @@ def _print_trace_metrics(spec: ServeSpec, m, slots: int):
           f"{m.kv_capacity_tokens} reserved "
           f"(util {m.cache_utilization:.2f}), "
           f"{m.preemptions} preemptions")
+    if r.prefix_cache == "on":
+        print(f"[serve]   prefix cache: {m.prefix_hits}/"
+              f"{m.prefix_lookups} admissions hit "
+              f"(rate {m.prefix_hit_rate:.2f}), "
+              f"{m.prefix_tokens_saved} prompt tokens spliced "
+              "instead of re-prefilled")
     if r.spec_mode:
         print(f"[serve]   spec[{r.spec_mode} k_mean={m.spec_k_mean:.1f}"
               f"{' adaptive' if r.spec_adaptive else ''}]: "
@@ -156,14 +182,15 @@ def _print_trace_metrics(spec: ServeSpec, m, slots: int):
 
 
 def run_trace(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
-              mean_out: int = 10, rate: float = 2.0, json_out=None):
+              mean_out: int = 10, rate: float = 2.0, json_out=None,
+              shared_frac: float = 0.0, prefix_len: int = 32):
     """Colocated trace replay: one :func:`build_replica` batcher."""
     r = spec.replica
-    cfg = _cfg(spec)
     sched = build_replica(r)
     injector = sched.injector
-    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
-                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
+    reqs = _make_reqs(spec, n_requests=n_requests, mean_in=mean_in,
+                      mean_out=mean_out, rate=rate,
+                      shared_frac=shared_frac, prefix_len=prefix_len)
     done = sched.run(reqs)
     _check_outcomes(done, injector, r.deadline_ms)
     m = sched.metrics(done)
@@ -178,18 +205,19 @@ def run_trace(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
 
 
 def run_disagg(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
-               mean_out: int = 10, rate: float = 2.0, json_out=None):
+               mean_out: int = 10, rate: float = 2.0, json_out=None,
+               shared_frac: float = 0.0, prefix_len: int = 32):
     """Disaggregated trace serving: prefill pool + decode pool, each with
     its own mesh layout and AR dispatch table (DESIGN.md §9), built from
     one :func:`build_replica` call.  ``spec.replica.ar_table`` seeds BOTH
     pools when a per-pool table is not given; ``fault_plan`` /
     ``deadline_ms`` arm the robustness layer (DESIGN.md §11)."""
     r = spec.replica
-    cfg = _cfg(spec)
     coord = build_replica(r)
     decode, injector = coord.decode, coord.injector
-    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
-                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
+    reqs = _make_reqs(spec, n_requests=n_requests, mean_in=mean_in,
+                      mean_out=mean_out, rate=rate,
+                      shared_frac=shared_frac, prefix_len=prefix_len)
     done = coord.run(reqs)
     _check_outcomes(done, injector, r.deadline_ms)
     m = coord.metrics(done)
@@ -228,16 +256,17 @@ def run_disagg(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
 
 
 def run_router(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
-               mean_out: int = 10, rate: float = 2.0, json_out=None):
+               mean_out: int = 10, rate: float = 2.0, json_out=None,
+               shared_frac: float = 0.0, prefix_len: int = 32):
     """Multi-replica trace serving (DESIGN.md §13): ``spec.replicas``
     self-contained replicas on disjoint device groups, placed by
     ``spec.router_policy``, reported as per-replica metrics plus their
     lossless fleet merge."""
     r = spec.replica
-    cfg = _cfg(spec)
     router = Router.from_spec(spec)
-    reqs = make_trace(n_requests, mean_in=mean_in, mean_out=mean_out,
-                      rate=rate, vocab=cfg.vocab_size, seed=r.seed)
+    reqs = _make_reqs(spec, n_requests=n_requests, mean_in=mean_in,
+                      mean_out=mean_out, rate=rate,
+                      shared_frac=shared_frac, prefix_len=prefix_len)
     done = router.run(reqs)
     # each replica has an independently-seeded injector; outcome checking
     # only needs to know whether ANY faults/deadlines were armed
@@ -257,6 +286,13 @@ def run_router(spec: ServeSpec, *, n_requests: int = 12, mean_in: int = 12,
     print(f"[serve]   placements {rm.placements} "
           f"(imbalance {rm.load_imbalance:.2f}), preemptions "
           f"{m.preemptions}, shed {m.shed_requests}")
+    if r.prefix_cache == "on":
+        # per-replica tries (no cross-replica sharing): the fleet line is
+        # the lossless sum over replicas
+        print(f"[serve]   fleet prefix cache: {m.prefix_hits}/"
+              f"{m.prefix_lookups} admissions hit "
+              f"(rate {m.prefix_hit_rate:.2f}), "
+              f"{m.prefix_tokens_saved} prompt tokens spliced")
     for i, pm in enumerate(rm.per_replica):
         print(f"[serve]   replica {i}: {pm.completed}/{pm.requests} reqs, "
               f"TTFT p99 {pm.ttft_steps_p99:.1f}, "
@@ -322,6 +358,26 @@ def build_parser() -> argparse.ArgumentParser:
                    default="full")
     p.add_argument("--admit-chunk", type=int, default=32)
     p.add_argument("--rate", type=float, default=2.0)
+    # -- prefix-sharing radix KV cache (trace mode only) -----------------
+    p.add_argument("--prefix-cache", choices=list(PREFIX_MODES),
+                   default="off",
+                   help="radix prefix cache over paged KV blocks "
+                        "(DESIGN.md §14): admission splices the longest "
+                        "previously-prefilled prompt prefix via "
+                        "copy-on-write block sharing and prefills only "
+                        "the suffix (needs --block-size > 0; rejects "
+                        "--kv-quant and --disagg)")
+    p.add_argument("--prefix-capacity", type=int, default=None,
+                   help="max trie-pinned blocks before LRU eviction of "
+                        "unreferenced prefix nodes (default: bounded by "
+                        "the physical pool)")
+    p.add_argument("--shared-frac", type=float, default=0.0,
+                   help="fraction of trace requests opening with one "
+                        "common system prompt (make_prefix_trace; 0 = "
+                        "plain make_trace)")
+    p.add_argument("--prefix-len", type=int, default=32,
+                   help="length of the shared system prompt for "
+                        "--shared-frac > 0")
     p.add_argument("--spec-mode", choices=["none", "ngram", "draft"],
                    default="none",
                    help="speculative decoding drafter (none = off)")
@@ -394,7 +450,8 @@ def main(argv=None):
     if _cfg(spec).family in ("encdec", "vlm"):
         raise SystemExit("trace mode supports text-only archs")
     kw = dict(n_requests=args.requests, rate=args.rate,
-              json_out=args.json_out)
+              json_out=args.json_out, shared_frac=args.shared_frac,
+              prefix_len=args.prefix_len)
     if spec.replicas > 1:
         run_router(spec, **kw)
     elif spec.replica.disagg:

@@ -1,0 +1,61 @@
+"""Mesh-path prefix cache: a shared-prefix trace on the (2 pod x 4 model)
+mesh with prefix_cache="on" must reproduce the local dense batcher's
+greedy tokens request-for-request while actually splicing blocks
+(prefix_tokens_saved > 0) — shared physical KV blocks are read through
+every device's shard of the paged cache, so a splice that was only
+almost-right shows up as token divergence here even when the 1-device
+run passes."""
+import numpy as np, jax, jax.numpy as jnp
+from repro.models import ModelConfig, make_plan, init_params
+from repro.inference.scheduler import Request, make_prefix_trace
+from repro.inference.spec import ReplicaSpec, build_replica
+
+cfg = ModelConfig(name="prefix-tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=96, dtype=jnp.float32)
+key = jax.random.PRNGKey(0)
+S_MAX, SLOTS = 64, 4
+# arch is nominal: ap/params built from the tiny cfg are passed explicitly
+RL = ReplicaSpec(arch="llama3.2-1b", slots=SLOTS, s_max=S_MAX)
+RM = RL.replace(tp=8, pods=2, ar_strategy="auto", overlap=True,
+                block_size=8, admit_mode="chunked", admit_chunk=16)
+
+
+def trace():
+    return make_prefix_trace(10, prefix_len=32, shared_frac=0.7,
+                             mean_in=10, mean_out=6, rate=3.0,
+                             vocab=cfg.vocab_size, seed=4,
+                             clip_len=S_MAX - 1)
+
+
+# -- local dense reference ---------------------------------------------------
+ap1 = make_plan(cfg, 1)
+p1 = init_params(key, ap1)
+ref_sched = build_replica(RL, ap=ap1, params=p1)
+ref = {r.rid: r.output for r in ref_sched.run(trace())}
+assert all(v is not None for v in ref.values())
+
+# -- mesh paged batcher with the prefix trie on ------------------------------
+apN = make_plan(cfg, 8)
+pN = init_params(key, apN)
+mesh_sched = build_replica(RM.replace(prefix_cache="on"), ap=apN, params=pN)
+done = mesh_sched.run(trace())
+m = mesh_sched.metrics(done)
+assert m.completed == len(done), m
+assert m.prefix_hits > 0 and m.prefix_tokens_saved > 0, \
+    (m.prefix_hits, m.prefix_tokens_saved)
+for r in done:
+    assert np.array_equal(ref[r.rid], r.output), \
+        f"rid {r.rid}: mesh spliced tokens diverge from local dense"
+mesh_sched.alloc.check()
+print(f"mesh prefix parity OK ({m.prefix_hits}/{m.prefix_lookups} hits, "
+      f"{m.prefix_tokens_saved} prompt tokens spliced)")
+
+# -- warm re-run: the trie persists, every shared admission must hit ---------
+done2 = mesh_sched.run(trace())
+m2 = mesh_sched.metrics(done2)
+assert m2.prefix_hits >= m.prefix_hits, (m2.prefix_hits, m.prefix_hits)
+for r in done2:
+    assert np.array_equal(ref[r.rid], r.output), f"rid {r.rid} warm re-run"
+print(f"mesh warm re-run OK ({m2.prefix_hits}/{m2.prefix_lookups} hits)")
+print("prefix OK")

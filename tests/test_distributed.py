@@ -28,6 +28,12 @@ def test_serve_trace_parity(dist_runner):
 
 
 @pytest.mark.dist
+def test_prefix(dist_runner):
+    out = dist_runner("case_prefix.py")
+    assert "prefix OK" in out
+
+
+@pytest.mark.dist
 def test_spec_decode_parity(dist_runner):
     out = dist_runner("case_spec.py")
     assert "spec OK" in out

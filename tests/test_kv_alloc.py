@@ -99,6 +99,154 @@ def test_truncate_interleaved_randomized():
     assert a.used_blocks == 0 and a.free_blocks == a.n_blocks - 1
 
 
+def _expect_freed(a: BlockAllocator, blocks) -> int:
+    """How many of ``blocks`` dropping ONE slot ref would actually free:
+    exactly those this slot holds the last reference to (no other slot,
+    no external hold)."""
+    return sum(1 for b in blocks
+               if a.slot_refs(b) == 1 and a.held_count(b) == 0)
+
+
+@pytest.mark.parametrize("seed", [7, 11, 13])
+def test_share_fork_interleaved_randomized(seed):
+    """600 random grow/share/fork/hold/evict/truncate/preempt/free/defrag
+    ops across 4 slots on a tight pool: the refcount/free-list/ownership
+    partition (``check()``) must hold after every op, one sharer's exit
+    must never free or remap a neighbour's blocks, and defragment must
+    remap each shared block exactly once across all referencing tables.
+    The op trace is printed on failure for replay."""
+    rng = np.random.default_rng(seed)
+    bs, max_blocks = 4, 8
+    a = BlockAllocator(n_blocks=21, block_size=bs, slots=4,
+                       max_blocks_per_slot=max_blocks)
+    remaps = []
+    a.register_remap_hook(lambda m: remaps.append(dict(m)))
+    tokens = [0, 0, 0, 0]
+    held: list = []                 # our (trie-like) external holds
+    ops = np.array(["grow", "share", "fork", "hold", "evict", "truncate",
+                    "preempt", "free", "defrag"])
+    p = np.array([0.28, 0.12, 0.1, 0.08, 0.08, 0.14, 0.06, 0.06, 0.08])
+    trace = []
+    try:
+        for _ in range(600):
+            s = int(rng.integers(4))
+            op = str(rng.choice(ops, p=p))
+            trace.append((op, s))
+            if op == "grow":
+                tgt = min(tokens[s] + int(rng.integers(1, 2 * bs + 1)),
+                          max_blocks * bs)
+                trace[-1] = (op, s, tgt)
+                if a.ensure(s, tgt):
+                    tokens[s] = max(tokens[s], tgt)
+            elif op == "share":
+                srcs = [x for x in range(4) if a.owned(x) and x != s]
+                if a.owned(s) or not srcs:
+                    continue
+                src = srcs[int(rng.integers(len(srcs)))]
+                k = int(rng.integers(1, len(a.owned(src)) + 1))
+                blocks = a.owned(src)[:k]
+                trace[-1] = (op, s, src, blocks)
+                refs_before = [a.slot_refs(b) for b in blocks]
+                a.share(s, blocks)
+                assert a.owned(s) == blocks
+                for b, r0 in zip(blocks, refs_before):
+                    assert a.slot_refs(b) == r0 + 1
+                tokens[s] = k * bs
+            elif op == "fork":
+                if not a.owned(s):
+                    continue
+                idx = int(rng.integers(len(a.owned(s))))
+                b = a.owned(s)[idx]
+                trace[-1] = (op, s, idx, b)
+                exclusive = a.is_exclusive(s, idx)
+                refs0, free0 = a.slot_refs(b), a.free_blocks
+                if not exclusive and free0 == 0:
+                    with pytest.raises(RuntimeError):
+                        a.fork_for_write(s, idx)
+                    continue
+                r = a.fork_for_write(s, idx)
+                if exclusive:
+                    assert r is None and a.owned(s)[idx] == b
+                else:
+                    old, new = r
+                    assert old == b and a.owned(s)[idx] == new
+                    assert a.slot_refs(b) == refs0 - 1
+                    assert a.slot_refs(new) == 1
+                    assert a.free_blocks == free0 - 1
+            elif op == "hold":
+                live = [b for x in range(4) for b in a.owned(x)]
+                if not live:
+                    continue
+                b = live[int(rng.integers(len(live)))]
+                trace[-1] = (op, b)
+                h0 = a.held_count(b)
+                a.hold([b])
+                held.append(b)
+                assert a.held_count(b) == h0 + 1
+            elif op == "evict":
+                if not held:
+                    continue
+                b = held.pop(int(rng.integers(len(held))))
+                trace[-1] = (op, b)
+                expect = (a.slot_refs(b) == 0 and a.held_count(b) == 1)
+                freed = a.release([b])
+                assert (freed == [b]) == expect, (freed, expect)
+            elif op == "truncate":
+                tgt = int(rng.integers(0, tokens[s] + 1))
+                trace[-1] = (op, s, tgt)
+                keep = a.blocks_for(tgt)
+                tail = a.owned(s)[keep:]
+                expect = _expect_freed(a, tail)
+                free0 = a.free_blocks
+                assert a.truncate(s, tgt) == expect
+                assert a.free_blocks == free0 + expect
+                tokens[s] = min(tokens[s], tgt)
+            elif op in ("preempt", "free"):
+                own = a.owned(s)
+                expect = _expect_freed(a, own)
+                neighbours = {x: a.owned(x) for x in range(4) if x != s}
+                free0 = a.free_blocks
+                n = a.preempt(s) if op == "preempt" else a.free(s)
+                assert n == expect, (n, expect)
+                assert a.free_blocks == free0 + expect
+                assert (a.table[s] == TRASH_BLOCK).all()
+                # neighbour safety: a sharer's exit never frees or moves
+                # blocks another slot still references
+                for x, ob in neighbours.items():
+                    assert a.owned(x) == ob, (s, x)
+                    for b in ob:
+                        assert b not in a._free, (s, x, b)
+                tokens[s] = 0
+            else:
+                pre_owned = {x: a.owned(x) for x in range(4)}
+                pre_live = {b for ob in pre_owned.values() for b in ob}
+                pre_live |= {b for b in held}
+                perm = a.defragment()
+                if perm is None:
+                    continue
+                m = remaps[-1]
+                # every live block (shared or not) remapped exactly once,
+                # and every referencing table moved through that one entry
+                assert set(m) == pre_live | {TRASH_BLOCK}
+                live_new = [m[b] for b in pre_live]
+                assert len(set(live_new)) == len(live_new), "remap not 1:1"
+                for x, ob in pre_owned.items():
+                    assert list(a.owned(x)) == [m[b] for b in ob], x
+                held = [m[b] for b in held]
+            a.check()
+    except AssertionError:
+        print(f"op trace (seed={seed}, {len(trace)} ops):")
+        for t in trace[-50:]:
+            print("  ", t)
+        raise
+    # drain: free every slot and release every hold -> empty pool
+    for sl in range(4):
+        a.free(sl)
+    a.release(held)
+    a.check()
+    assert a.used_blocks == 0 and a.free_blocks == a.n_blocks - 1
+
+
 class _JunkDrafter(Drafter):
     """Proposes deliberately wrong tokens: every draft is rejected, so
     every verify step writes a K/V tail that truncate must roll back."""

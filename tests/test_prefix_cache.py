@@ -1,0 +1,194 @@
+"""PrefixCache radix-trie properties against a brute-force model.
+
+The trie (``inference/prefix_cache.py``) keys physical KV blocks by the
+``block_size``-token groups they cover.  A dict mapping every inserted
+group-path to its first-published block is an obvious-but-slow spec for
+the same structure: longest-prefix ``match`` must return exactly the
+model's blocks for the longest resident chain, and ``insert`` must keep
+first-published blocks on duplicates.  Randomized insert/match streams
+(hypothesis when installed, seeded fallback otherwise) check the two
+agree op-for-op while the backing allocator's refcount/hold partition
+(``check()``) stays intact.
+
+Deterministic tests pin down the eviction contract separately: LRU
+order follows the clock, leaf-first draining, and — the safety property
+admission relies on — a node whose block a live slot still references
+is never evicted, no matter the pressure.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.inference.kv_cache import BlockAllocator
+from repro.inference.prefix_cache import PrefixCache
+
+BS = 4
+
+
+def _mk(n_blocks=256, capacity=None, slots=2):
+    a = BlockAllocator(n_blocks=n_blocks, block_size=BS, slots=slots,
+                       max_blocks_per_slot=8)
+    return a, PrefixCache(a, capacity=capacity)
+
+
+def _groups(tokens):
+    n = len(tokens) // BS
+    return tuple(tuple(int(t) for t in tokens[i * BS:(i + 1) * BS])
+                 for i in range(n))
+
+
+def _publish(a, pc, tokens):
+    """Prefill-and-publish like the batcher: allocate blocks through a
+    slot, insert, then free the slot (holds keep published blocks)."""
+    n = len(tokens) // BS
+    if n == 0 or not a.ensure(0, n * BS):
+        return None
+    blocks = list(a.owned(0))[:n]
+    pc.insert(tokens, blocks)
+    a.free(0)
+    return blocks
+
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([2, 3]))
+@settings(max_examples=30, deadline=None)
+def test_match_insert_vs_brute_force(seed, vocab):
+    """40-op random insert/match streams over a tiny vocabulary (to force
+    shared prefixes) must agree with the dict-of-prefixes model exactly,
+    and never violate the allocator partition."""
+    rng = np.random.default_rng(seed)
+    a, pc = _mk()
+    model = {}                       # group-path tuple -> first block
+    for _ in range(40):
+        tokens = rng.integers(0, vocab, int(rng.integers(0, 4 * BS + 3)))
+        g = _groups(tokens)
+        if rng.random() < 0.5:
+            blocks = _publish(a, pc, tokens)
+            if blocks is None:
+                continue
+            for i in range(1, len(g) + 1):
+                model.setdefault(g[:i], blocks[i - 1])
+        else:
+            got = pc.match(tokens)
+            want = []
+            for i in range(1, len(g) + 1):
+                if g[:i] not in model:
+                    break
+                want.append(model[g[:i]])
+            assert got == want, (got, want)
+        a.check()
+        assert pc.held_blocks == len(model)
+        for b in model.values():
+            assert a.held_count(b) >= 1
+    # full drain: every model chain must still match end-to-end
+    for path, _ in sorted(model.items(), key=lambda kv: len(kv[0])):
+        flat = [t for grp in path for t in grp]
+        assert pc.match(flat) == [model[path[:i + 1]]
+                                  for i in range(len(path))]
+
+
+def test_insert_keeps_first_published_block():
+    a, pc = _mk()
+    toks = list(range(2 * BS))
+    b1 = _publish(a, pc, toks)
+    b2_candidate_owner = a.ensure(1, 2 * BS)
+    assert b2_candidate_owner
+    dup = list(a.owned(1))[:2]
+    assert pc.insert(toks, dup) == 0, "duplicate groups must pin nothing"
+    a.free(1)
+    assert pc.match(toks) == b1
+    a.check()
+
+
+def test_lru_eviction_order_follows_clock():
+    """Three disjoint chains published in order; capacity pressure must
+    evict the least-recently matched chain first, leaf before parent."""
+    a, pc = _mk(capacity=None)
+    chains = {k: [k * 50 + t for t in range(2 * BS)] for k in range(3)}
+    for k in range(3):
+        _publish(a, pc, chains[k])
+    pc.match(chains[0])              # refresh chain 0: 1 is now coldest
+    assert pc.held_blocks == 6
+    freed = pc.reclaim(2)
+    assert freed == 2 and pc.evictions == 2
+    assert pc.match(chains[1]) == [], "coldest chain evicted first"
+    assert len(pc.match(chains[0])) == 2
+    assert len(pc.match(chains[2])) == 2
+    a.check()
+
+
+def test_capacity_evicts_on_insert():
+    a, pc = _mk(capacity=2)
+    _publish(a, pc, [1 + t for t in range(2 * BS)])
+    _publish(a, pc, [100 + t for t in range(2 * BS)])
+    assert pc.held_blocks == 2, "insert past capacity must evict LRU"
+    assert pc.evictions == 2
+    a.check()
+    assert a.used_blocks == pc.held_blocks
+
+
+def test_lru_never_evicts_block_with_live_slot_refs():
+    """The safety property: a sharer's blocks stay resident under any
+    reclaim pressure; only unreferenced nodes drain."""
+    a, pc = _mk()
+    shared = [7] * (2 * BS)
+    blocks = _publish(a, pc, shared)
+    a.share(1, blocks)               # a live request maps the chain
+    _publish(a, pc, [200 + t for t in range(2 * BS)])
+    freed = pc.reclaim(10 ** 9)      # unbounded pressure
+    assert freed == 2, "only the unreferenced chain may drain"
+    assert pc.match(shared) == blocks
+    for b in blocks:
+        assert a.held_count(b) == 1 and a.slot_refs(b) == 1
+    a.check()
+    # once the sharer exits, the same pressure drains the rest
+    a.free(1)
+    assert pc.reclaim(10 ** 9) == 2
+    assert pc.held_blocks == 0
+    a.check()
+    assert a.used_blocks == 0
+
+
+def test_interior_node_unevictable_until_subtree_drains():
+    a, pc = _mk()
+    toks = list(range(3 * BS))
+    blocks = _publish(a, pc, toks)
+    a.share(1, blocks[2:])           # pin only the deepest node
+    assert pc.reclaim(10 ** 9) == 0, ("parents of a referenced leaf must "
+                                      "survive (path must stay walkable)")
+    assert pc.match(toks) == blocks
+    a.free(1)
+    assert pc.reclaim(10 ** 9) == 3
+    a.check()
+
+
+def test_invalidate_block_drops_subtree():
+    a, pc = _mk()
+    toks = list(range(3 * BS))
+    blocks = _publish(a, pc, toks)
+    assert pc.invalidate_block(blocks[1]) == 2, "node + its child"
+    assert pc.match(toks) == blocks[:1]
+    assert pc.invalidate_block(blocks[1]) == 0, "idempotent on non-resident"
+    a.check()
+
+
+def test_remap_survives_defragment():
+    """Defragmenting the allocator must leave every chain matchable at
+    the remapped physical blocks (the registered remap hook)."""
+    a, pc = _mk()
+    junk = a.ensure(1, 3 * BS)       # fragment the pool
+    assert junk
+    toks = [300 + t for t in range(2 * BS)]
+    old = _publish(a, pc, toks)
+    a.free(1)
+    perm = a.defragment()
+    assert perm is not None
+    new = pc.match(toks)
+    assert len(new) == 2 and new != old
+    assert [int(perm[b]) for b in new] == old, "perm[new] = old"
+    for b in new:
+        assert a.held_count(b) == 1
+    a.check()

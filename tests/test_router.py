@@ -185,6 +185,21 @@ BAD_COMBOS = [
     (dict(disagg=True), "batch", "trace-mode only"),
     (dict(kv_quant=True), "batch", "trace-mode only"),
     (dict(block_size=8, tp=8), "batch", "local-path"),
+    (dict(prefix_cache="maybe"), "trace", "prefix_cache"),
+    (dict(prefix_cache="on"), "trace", "paged"),
+    (dict(prefix_cache="on", block_size=8, kv_quant=True), "trace",
+     "prefix_cache is incompatible with kv_quant"),
+    (dict(prefix_cache="on", block_size=8, disagg=True), "trace",
+     "prefix_cache is incompatible with disagg"),
+    (dict(prefix_cache="on", block_size=8, admit_chunk=12), "trace",
+     "prefix_cache"),
+    (dict(prefix_cache="on", block_size=8, admit_chunk=0), "trace",
+     "prefix_cache"),
+    (dict(prefix_cache="on", block_size=8, prefix_capacity=0), "trace",
+     "prefix_capacity"),
+    (dict(prefix_cache="on", block_size=8, arch="hymba-1.5b"), "trace",
+     "dense"),
+    (dict(prefix_cache="on", block_size=8), "batch", "trace-mode only"),
     (dict(disagg=True, prefill_tp=0), "trace", "prefill_tp"),
     (dict(disagg=True, prefill_tp=6, prefill_pods=4), "trace", "divisible"),
     (dict(disagg=True, decode_tp=6, decode_pods=4), "trace", "divisible"),
@@ -223,6 +238,11 @@ def test_cli_rejects_like_validate():
             (["--mode", "trace", "--kv-quant", "--block-size", "8"],
              "block_size"),
             (["--mode", "trace", "--ar-quant", "auto"], "ar_strategy"),
+            (["--mode", "trace", "--prefix-cache", "on"], "paged"),
+            (["--mode", "trace", "--prefix-cache", "on", "--block-size",
+              "8", "--kv-quant"], "prefix_cache"),
+            (["--mode", "trace", "--prefix-cache", "on", "--block-size",
+              "8", "--arch", "hymba-1.5b"], "dense"),
             (["--mode", "trace", "--admit-mode", "chunked", "--s-max",
               "100", "--admit-chunk", "32"], "admit_chunk")):
         with pytest.raises(SystemExit, match=frag):
